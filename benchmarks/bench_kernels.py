@@ -1,0 +1,53 @@
+"""Kernel-layer microbenchmark: per-round cost of Block-Shotgun vs the
+scalar-gather round it replaces (CPU timings; the TPU claim is structural —
+arithmetic intensity O(block) vs O(1), see DESIGN §4)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import objectives as obj
+from repro.core.shotgun import shotgun_solve
+from repro.data import synthetic as syn
+from repro.kernels import ops
+
+
+def _time(fn, reps=5):
+    fn()                       # warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / reps * 1e6   # us
+
+
+def run() -> list[dict]:
+    rows = []
+    for (n, d) in [(1024, 2048), (2048, 8192)]:
+        A, y, _ = syn.sparco(seed=0, n=n, d=d)
+        prob = obj.make_problem(A, y, lam=0.5)
+        Ap, yp, mask = ops.pad_problem(prob.A, prob.y)
+        x = jnp.zeros(Ap.shape[1])
+        z = jnp.zeros(Ap.shape[0])
+        blk = jnp.arange(4, dtype=jnp.int32)
+
+        us_blk = _time(lambda: ops.block_shotgun_round(
+            Ap, z, x, blk, prob.lam, prob.beta, yp, mask, interpret=True))
+        # scalar Shotgun round with the same effective P = 4*128
+        us_scalar = _time(lambda: shotgun_solve(
+            prob, jax.random.PRNGKey(0), P=4 * ops.BLOCK, rounds=1))
+        rows.append({"n": n, "d": d, "P_eff": 4 * ops.BLOCK,
+                     "block_round_us": round(us_blk, 1),
+                     "scalar_round_us": round(us_scalar, 1),
+                     "flops_per_byte_block": ops.BLOCK,
+                     "flops_per_byte_scalar": 1})
+        print(f"kernels,n={n},d={d},block_round={us_blk:.0f}us,"
+              f"scalar_round={us_scalar:.0f}us", flush=True)
+    return emit(rows, "bench_kernels")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: timing + CSV emission + F* oracles."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def fstar_of(prob, iters=6000) -> float:
+    from repro.core.baselines.fista import fista_solve
+    return float(fista_solve(prob, iters).objective[-1])
+
+
+def timed(fn, *args, **kw):
+    """(result, seconds) with block_until_ready on jax outputs."""
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, time.time() - t0
+
+
+def emit(rows, name):
+    """Write rows (list of dicts) to results/<name>.json and echo CSV."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    return rows

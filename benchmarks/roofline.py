@@ -1,0 +1,53 @@
+"""Roofline table assembly: reads the dry-run JSONs (launch/dryrun.py) and
+prints the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(tag="final"):
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{tag}.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def fmt_table(rows, mesh="single"):
+    out = []
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'bottleneck':>11s} {'useful':>7s}")
+    out.append(hdr)
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(f"{r['arch']:24s} {r['shape']:12s} {'SKIP':>10s}")
+            continue
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:24s} {r['shape']:12s} {'ERROR':>10s}")
+            continue
+        t = r["terms"]
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {t['compute_s']:10.3e} "
+            f"{t['memory_s']:10.3e} {t['collective_s']:10.3e} "
+            f"{r['bottleneck'][:-2]:>11s} "
+            f"{r.get('useful_flops_ratio', 0):7.3f}")
+    return "\n".join(out)
+
+
+def run():
+    rows = load("final")
+    for mesh in ("single", "multi"):
+        n_ok = sum(1 for r in rows if r.get("mesh") == mesh and r["status"] == "ok")
+        n_skip = sum(1 for r in rows if r.get("mesh") == mesh and r["status"] == "skip")
+        n_err = sum(1 for r in rows if r.get("mesh") == mesh and r["status"] == "error")
+        print(f"roofline,{mesh},ok={n_ok},skip={n_skip},err={n_err}", flush=True)
+    print(fmt_table(load("opt"), "single"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig2 fig5  # subset
+
+Each sub-benchmark prints progress lines; this wrapper ends with a
+``name,seconds,rows`` CSV summary and writes JSON under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, fig2_parallelism,
+                            fig3_lasso_solvers, fig4_logreg, fig5_speedup,
+                            roofline, shotgun_scale)
+    ALL = {
+        "fig2": fig2_parallelism.run,
+        "fig3": fig3_lasso_solvers.run,
+        "fig4": fig4_logreg.run,
+        "fig5": fig5_speedup.run,
+        "kernels": bench_kernels.run,
+        "shotgun_scale": shotgun_scale.run,
+        "roofline": roofline.run,
+    }
+    picks = [a for a in sys.argv[1:] if a in ALL] or list(ALL)
+    summary = []
+    for name in picks:
+        t0 = time.time()
+        rows = ALL[name]()
+        dt = time.time() - t0
+        summary.append((name, dt, len(rows) if rows is not None else 0))
+    print("\n# name,seconds,rows")
+    for name, dt, n in summary:
+        print(f"{name},{dt:.1f},{n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Atomic, sharding-aware checkpointing with elastic resharding (DESIGN §7).
+
+Layout on disk:
+
+    <dir>/step_<k>/
+        manifest.json      tree structure, per-leaf global shape/dtype, step
+        arrays.npz         one entry per leaf (globally-gathered values)
+    <dir>/LATEST           text file naming the newest complete step dir
+
+Writes are atomic: everything lands in ``step_<k>.tmp`` and is renamed only
+after the npz + manifest are fully flushed; a crash mid-write leaves the
+previous checkpoint untouched (auto-resume then picks the older step).
+
+Restore reshards to *any* mesh: each leaf is restored from its global value
+with ``jax.device_put(value, NamedSharding(new_mesh, new_spec))`` — topology
+changes (elastic scaling) only require passing the new shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LATEST = "LATEST"
+
+SEP = "|"  # path-key separator inside the npz
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(_key_str(k) for k in path)
+        out[key] = leaf
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def save(ckpt_dir, step: int, tree, *, keep: int = 3) -> pathlib.Path:
+    """Atomically save `tree` as step `step`; prune to the `keep` newest."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:012d}"
+    tmp = ckpt_dir / f"step_{step:012d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(tree)
+    arrays, manifest_leaves = {}, {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        manifest_leaves[key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+    with open(tmp / "arrays.npz", "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    manifest = {"step": step, "leaves": manifest_leaves}
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                     # atomic publish
+    (ckpt_dir / LATEST).write_text(final.name)
+
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:012d}", ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir) -> list[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    out = []
+    for p in ckpt_dir.glob("step_*"):
+        if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+            continue
+        out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, template, *, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of `template` (a pytree of arrays or
+    ShapeDtypeStructs).  If `shardings` (a matching pytree of NamedSharding)
+    is given, each leaf is placed with it — this is the elastic-rescale path:
+    the on-disk global value is resharded to whatever mesh is current.
+
+    Returns (step, tree).  Raises FileNotFoundError if no checkpoint.
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = ckpt_dir / f"step_{step:012d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves_t, treedef = flat_t
+    flat_s = None
+    if shardings is not None:
+        flat_s = [l for _, l in jax.tree_util.tree_flatten_with_path(shardings)[0]]
+
+    out_leaves = []
+    for i, (tpath, tleaf) in enumerate(leaves_t):
+        key = SEP.join(_key_str(k) for k in tpath)
+        if key not in data:
+            raise KeyError(f"checkpoint {path} missing leaf {key}")
+        arr = data[key]
+        want_shape = tuple(tleaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != template {want_shape}")
+        arr = arr.astype(tleaf.dtype)
+        if flat_s is not None:
+            out_leaves.append(jax.device_put(arr, flat_s[i]))
+        else:
+            out_leaves.append(jnp.asarray(arr))
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, out_leaves)

@@ -1,0 +1,20 @@
+"""Shotgun: parallel coordinate descent for L1-regularized losses (ICML 2011).
+
+Public API:
+    make_problem, Problem, objective, lambda_max          (objectives)
+    shooting_solve, shotgun_solve, shotgun_dup_solve      (Alg. 1 / Alg. 2)
+    shotgun_cdn_solve, shooting_cdn_solve                 (CDN variants)
+    spectral_radius, p_star                               (parallelism limit)
+    solve_path                                            (lambda continuation)
+    shotgun_sharded_solve                                 (multi-device)
+"""
+from repro.core.objectives import (LASSO, LOGISTIC, Problem, DupProblem,
+                                   make_problem, dup_from, objective,
+                                   lambda_max, soft_threshold)
+from repro.core.shotgun import (shooting_solve, shotgun_solve,
+                                shotgun_dup_solve, rounds_to_tolerance,
+                                diverged, Result, Trace)
+from repro.core.cdn import shotgun_cdn_solve, shooting_cdn_solve
+from repro.core.spectral import spectral_radius, p_star, p_star_dup
+from repro.core.path import solve_path, lambda_sequence
+from repro.core.sharded import shotgun_sharded_solve

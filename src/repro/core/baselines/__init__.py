@@ -1,0 +1,10 @@
+"""Every solver the paper compares against (Secs. 4.1.2, 4.2.2), in JAX."""
+from repro.core.baselines.common import BaselineResult
+from repro.core.baselines.fista import fista_solve, f_star
+from repro.core.baselines.sgd import sgd_solve, sgd_rate_search, parallel_sgd_solve
+from repro.core.baselines.smidas import smidas_solve
+from repro.core.baselines.sparsa import sparsa_solve
+from repro.core.baselines.gpsr import gpsr_bb_solve
+from repro.core.baselines.iht import iht_solve
+from repro.core.baselines.fpc_as import fpc_as_solve
+from repro.core.baselines.l1_ls import l1_ls_solve

@@ -1,0 +1,31 @@
+"""Shared plumbing for the baseline solvers the paper compares against."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import objectives as obj
+
+
+class BaselineResult(NamedTuple):
+    x: jax.Array
+    objective: jax.Array   # (iters,) trace of F
+
+
+def grad_data(x, prob: obj.Problem):
+    """Full gradient of the data term: A^T r(Ax)."""
+    z = prob.A @ x
+    r = obj.residual_like(z, prob.y, prob.loss)
+    return prob.A.T @ r
+
+
+def lipschitz(prob: obj.Problem, iters: int = 60) -> jax.Array:
+    """Gradient Lipschitz constant of the data term.
+
+    Lasso: rho(A^T A).  Logistic: rho(A^T A) / 4.
+    """
+    from repro.core.spectral import spectral_radius
+    rho = spectral_radius(prob.A, iters=iters)
+    return rho * (0.25 if prob.loss == obj.LOGISTIC else 1.0)

@@ -1,0 +1,96 @@
+"""L1_LS (Kim, Koh, Lustig, Boyd, Gorinevsky 2007): log-barrier interior
+point method for the Lasso, with Newton steps solved by (preconditioned) CG —
+"the expensive step (PCG)" of the paper's Sec. 4.1.2.
+
+Formulation:  min_x,u  1/2||Ax - y||^2 + lam 1^T u   s.t.  -u <= x <= u
+Barrier:      phi_t(x,u) = t(1/2||Ax-y||^2 + lam 1^Tu) - sum log(u+x) - sum log(u-x)
+
+Newton direction via CG on the (2d x 2d) KKT system using Hessian-vector
+products (A touched only through matvecs), backtracking line search keeping
+the iterate strictly feasible, and a geometric t-schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import objectives as obj
+from repro.core.baselines.common import BaselineResult
+
+ALPHA = 0.01
+BETA_LS = 0.5
+MAX_LS = 30
+
+
+def _barrier_value(x, u, t, prob):
+    r = prob.A @ x - prob.y
+    f = 0.5 * jnp.vdot(r, r) + prob.lam * jnp.sum(u)
+    s1 = u + x
+    s2 = u - x
+    bad = jnp.any(s1 <= 0) | jnp.any(s2 <= 0)
+    val = t * f - jnp.sum(jnp.log(jnp.maximum(s1, 1e-30))) \
+        - jnp.sum(jnp.log(jnp.maximum(s2, 1e-30)))
+    return jnp.where(bad, jnp.inf, val)
+
+
+@functools.partial(jax.jit, static_argnames=("outer", "newton_per_t", "cg_iters"))
+def l1_ls_solve(prob: obj.Problem, outer: int = 12, newton_per_t: int = 2,
+                cg_iters: int = 40, t0: float = 0.1, mu: float = 4.0) -> BaselineResult:
+    assert prob.loss == obj.LASSO
+    A, y, lam = prob.A, prob.y, prob.lam
+    n, d = A.shape
+    x0 = jnp.zeros(d, A.dtype)
+    u0 = jnp.ones(d, A.dtype)
+
+    def newton_step(x, u, t):
+        r = A @ x - y
+        s1 = u + x            # > 0
+        s2 = u - x            # > 0
+        i1, i2 = 1.0 / s1, 1.0 / s2
+        # gradients
+        gx = t * (A.T @ r) - i1 + i2
+        gu = t * lam - i1 - i2
+        # Hessian blocks: Hxx = 2t A^T A + D1+D2 ; Hxu=Hux = D1-D2 ; Huu = D1+D2
+        D1, D2 = i1 * i1, i2 * i2
+        dpl, dmi = D1 + D2, D1 - D2
+
+        def hvp(p):
+            px, pu = p[:d], p[d:]
+            hx = t * (A.T @ (A @ px)) + dpl * px + dmi * pu
+            hu = dmi * px + dpl * pu
+            return jnp.concatenate([hx, hu])
+
+        g = jnp.concatenate([gx, gu])
+        # Jacobi preconditioner from the diagonal of H
+        diagH = jnp.concatenate([t + dpl, dpl])
+        Minv = lambda p: p / diagH
+        dxu, _ = jax.scipy.sparse.linalg.cg(hvp, -g, M=Minv, maxiter=cg_iters)
+        dx, du = dxu[:d], dxu[d:]
+
+        # backtracking line search, keeping strict feasibility
+        phi0 = _barrier_value(x, u, t, prob)
+        gdot = jnp.vdot(g, dxu)
+
+        def cond(state):
+            s, it = state
+            phi = _barrier_value(x + s * dx, u + s * du, t, prob)
+            return (phi > phi0 + ALPHA * s * gdot) & (it < MAX_LS)
+
+        def body(state):
+            s, it = state
+            return s * BETA_LS, it + 1
+
+        s, _ = jax.lax.while_loop(cond, body, (jnp.float32(1.0), 0))
+        return x + s * dx, u + s * du
+
+    def outer_step(carry, _):
+        x, u, t = carry
+        for _ in range(newton_per_t):
+            x, u = newton_step(x, u, t)
+        return (x, u, t * mu), obj.objective(x, prob)
+
+    (x, u, _), fs = jax.lax.scan(outer_step, (x0, u0, jnp.float32(t0)),
+                                 None, length=outer)
+    return BaselineResult(x=x, objective=fs)

@@ -1,0 +1,67 @@
+"""SpaRSA (Wright, Nowak, Figueiredo 2009): iterative shrinkage/thresholding
+with a Barzilai-Borwein spectral step and a nonmonotone acceptance test.
+
+    alpha_k  from BB:  alpha = (Δg . Δx) / (Δx . Δx)   (curvature estimate)
+    x_{k+1}  = S(x_k - g_k / alpha, lam / alpha)
+    accept if F decreases vs the max of the last M objectives (safeguarded by
+    doubling alpha up to MAX_TRIES times).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import objectives as obj
+from repro.core.baselines.common import BaselineResult, grad_data
+
+M_HISTORY = 5
+MAX_TRIES = 10
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def sparsa_solve(prob: obj.Problem, iters: int = 500) -> BaselineResult:
+    A, lam = prob.A, prob.lam
+    d = A.shape[1]
+    x0 = jnp.zeros(d, A.dtype)
+    g0 = grad_data(x0, prob)
+    f0 = obj.objective(x0, prob)
+    hist0 = jnp.full((M_HISTORY,), f0)
+
+    def step(carry, _):
+        x, g, alpha, hist = carry
+        f_ref = jnp.max(hist)
+
+        def trial(a):
+            x_t = obj.soft_threshold(x - g / a, lam / a)
+            return x_t, obj.objective(x_t, prob)
+
+        def cond(state):
+            a, _, f_t, it = state
+            # sufficient decrease relative to history (nonmonotone Armijo)
+            return (f_t > f_ref - 1e-5 * a * 0.5 *
+                    jnp.sum((state[1] - x) ** 2)) & (it < MAX_TRIES)
+
+        def body(state):
+            a, _, _, it = state
+            a = a * 2.0
+            x_t, f_t = trial(a)
+            return a, x_t, f_t, it + 1
+
+        x_t, f_t = trial(alpha)
+        alpha_f, x_new, f_new, _ = jax.lax.while_loop(
+            cond, body, (alpha, x_t, f_t, 0))
+
+        g_new = grad_data(x_new, prob)
+        dx = x_new - x
+        dg = g_new - g
+        denom = jnp.vdot(dx, dx)
+        bb = jnp.where(denom > 1e-30, jnp.vdot(dx, dg) / denom, alpha_f)
+        bb = jnp.clip(bb, 1e-3, 1e10)
+        hist = jnp.concatenate([hist[1:], f_new[None]])
+        return (x_new, g_new, bb, hist), f_new
+
+    (x, _, _, _), fs = jax.lax.scan(step, (x0, g0, jnp.float32(1.0), hist0),
+                                    None, length=iters)
+    return BaselineResult(x=x, objective=fs)

@@ -1,0 +1,179 @@
+"""L1-regularized objectives from the paper (Eq. 1-4).
+
+Two problem families:
+  * Lasso (Eq. 2):             F(x) = 1/2 ||Ax - y||^2 + lam ||x||_1
+  * Sparse logistic (Eq. 3):   F(x) = sum_i log(1 + exp(-y_i a_i^T x)) + lam ||x||_1
+
+Conventions
+-----------
+- ``A`` is (n, d) dense (the "Large, Sparse" category uses a block-CSR
+  emulation in ``repro.data.synthetic`` that still presents dense tiles).
+- Columns of A are assumed normalized so diag(A^T A) = 1 (the paper's
+  w.l.o.g.); ``normalize_columns`` enforces it.
+- beta is the per-coordinate curvature bound of Assumption 2.1:
+  beta = 1 (squared loss), beta = 1/4 (logistic loss)  [Eq. 6].
+
+The duplicated-feature positive-orthant form (Eq. 4) is used by the
+theory-faithful solver in ``shotgun.py``; practical solvers use the signed
+form with the soft-threshold update (equivalent fixed points).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LASSO = "lasso"
+LOGISTIC = "logistic"
+
+BETA = {LASSO: 1.0, LOGISTIC: 0.25}
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("A", "y", "lam"), meta_fields=("loss",))
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """An instance of Eq. (1).  ``loss`` is static metadata under jit."""
+
+    A: jax.Array          # (n, d) design matrix, column-normalized
+    y: jax.Array          # (n,) observations (reals for lasso, +-1 for logistic)
+    lam: jax.Array        # scalar regularization
+    loss: str             # LASSO | LOGISTIC
+
+    def _replace(self, **kw) -> "Problem":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.A.shape[1]
+
+    @property
+    def beta(self) -> float:
+        return BETA[self.loss]
+
+
+def normalize_columns(A: jax.Array, eps: float = 1e-12) -> tuple[jax.Array, jax.Array]:
+    """Scale columns of A to unit l2 norm; returns (A_normalized, scales)."""
+    scales = jnp.sqrt(jnp.sum(A * A, axis=0))
+    scales = jnp.where(scales < eps, 1.0, scales)
+    return A / scales[None, :], scales
+
+
+def make_problem(A, y, lam, loss=LASSO, normalize=True) -> Problem:
+    A = jnp.asarray(A, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    if normalize:
+        A, _ = normalize_columns(A)
+    return Problem(A=A, y=y, lam=jnp.float32(lam), loss=loss)
+
+
+# ---------------------------------------------------------------------------
+# Objective values / gradients.  All solvers maintain the "margin" vector
+# z = A x  (the paper's maintained Ax trick, Sec 4.1.1) so none of these
+# recompute A x from scratch inside the inner loop.
+# ---------------------------------------------------------------------------
+
+def data_loss_from_margin(z: jax.Array, y: jax.Array, loss: str) -> jax.Array:
+    if loss == LASSO:
+        r = z - y
+        return 0.5 * jnp.vdot(r, r)
+    # logistic: sum log(1 + exp(-y z)), numerically stable
+    m = -y * z
+    return jnp.sum(jnp.logaddexp(0.0, m))
+
+
+def objective_from_margin(z, x, prob: Problem) -> jax.Array:
+    return data_loss_from_margin(z, prob.y, prob.loss) + prob.lam * jnp.sum(jnp.abs(x))
+
+
+def objective(x: jax.Array, prob: Problem) -> jax.Array:
+    return objective_from_margin(prob.A @ x, x, prob)
+
+
+def residual_like(z: jax.Array, y: jax.Array, loss: str) -> jax.Array:
+    """dL/dz — the vector 'r' such that grad of data loss = A^T r.
+
+    Lasso: r = z - y.  Logistic: r = -y * sigmoid(-y z).
+    """
+    if loss == LASSO:
+        return z - y
+    return -y * jax.nn.sigmoid(-y * z)
+
+
+def coordinate_grad(A: jax.Array, r: jax.Array, j) -> jax.Array:
+    """(∇ of data loss)_j = A[:, j]^T r."""
+    return A[:, j] @ r
+
+
+def soft_threshold(v: jax.Array, t) -> jax.Array:
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def shooting_delta(x_j, g_j, lam, beta):
+    """Signed-form coordinate update (equivalent to Eq. 5 on the duplicated
+    problem): minimize the Assumption-2.1 quadratic model plus lam|x_j + d|.
+
+        x_j_new = S(x_j - g_j / beta, lam / beta),   delta = x_j_new - x_j
+    """
+    x_new = soft_threshold(x_j - g_j / beta, lam / beta)
+    return x_new - x_j
+
+
+def lambda_max(A: jax.Array, y: jax.Array, loss: str) -> jax.Array:
+    """Smallest lam for which x = 0 is optimal: ||A^T dL/dz(0)||_inf."""
+    z0 = jnp.zeros(A.shape[0], A.dtype)
+    r0 = residual_like(z0, y, loss)
+    return jnp.max(jnp.abs(A.T @ r0))
+
+
+# ---------------------------------------------------------------------------
+# Duplicated-feature positive-orthant form (Eq. 4), used by the
+# theory-faithful Alg. 2 implementation and the theory tests.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("A", "y", "lam"), meta_fields=("loss",))
+@dataclasses.dataclass(frozen=True)
+class DupProblem:
+    A: jax.Array   # original (n, d); A_hat = [A, -A] is never materialized
+    y: jax.Array
+    lam: jax.Array
+    loss: str
+
+    @property
+    def d2(self) -> int:
+        return 2 * self.A.shape[1]
+
+    @property
+    def beta(self) -> float:
+        return BETA[self.loss]
+
+
+def dup_from(prob: Problem) -> DupProblem:
+    return DupProblem(prob.A, prob.y, prob.lam, prob.loss)
+
+
+def dup_column(dp: DupProblem, j):
+    """Column j of A_hat = [A, -A] without materializing it."""
+    d = dp.A.shape[1]
+    sign = jnp.where(j < d, 1.0, -1.0)
+    return sign * dp.A[:, j % d], sign
+
+
+def dup_objective(xhat: jax.Array, dp: DupProblem) -> jax.Array:
+    d = dp.A.shape[1]
+    x = xhat[:d] - xhat[d:]
+    z = dp.A @ x
+    return data_loss_from_margin(z, dp.y, dp.loss) + dp.lam * jnp.sum(xhat)
+
+
+def dup_to_signed(xhat: jax.Array) -> jax.Array:
+    d = xhat.shape[0] // 2
+    return xhat[:d] - xhat[d:]

@@ -1,0 +1,57 @@
+"""Pathwise optimization (Sec. 4.1.1, after Friedman et al. 2010).
+
+Rather than solving directly at the target lambda, solve along an
+exponentially decreasing sequence lam_1 > lam_2 > ... > lam_target,
+warm-starting each solve from the previous solution.  lam_1 is chosen
+just below lambda_max = ||A^T dL/dz(0)||_inf (above which x* = 0).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import objectives as obj
+from repro.core import shotgun
+
+
+class PathResult(NamedTuple):
+    x: jax.Array                  # solution at the target lambda
+    lambdas: np.ndarray           # the continuation sequence
+    objectives: np.ndarray        # final objective at each lambda
+    nnz: np.ndarray               # sparsity along the path
+
+
+def lambda_sequence(lam_max: float, lam_target: float, num: int = 10) -> np.ndarray:
+    """Geometric sequence from just-below lam_max down to lam_target."""
+    lam_max = float(lam_max)
+    lam_target = float(lam_target)
+    if lam_target >= lam_max:
+        return np.array([lam_target])
+    start = 0.95 * lam_max
+    return np.geomspace(start, lam_target, num)
+
+
+def solve_path(prob: obj.Problem, key: jax.Array, lam_target: float,
+               P: int = 8, rounds_per_lambda: int = 200, num_lambdas: int = 10,
+               solver: Callable | None = None) -> PathResult:
+    """Warm-started lambda-continuation wrapper around any shotgun-like solver.
+
+    ``solver(prob, key, P, rounds, x0) -> shotgun.Result``
+    """
+    if solver is None:
+        solver = lambda p, k, P, rounds, x0: shotgun.shotgun_solve(p, k, P=P, rounds=rounds, x0=x0)
+    lmax = float(obj.lambda_max(prob.A, prob.y, prob.loss))
+    lams = lambda_sequence(lmax, lam_target, num_lambdas)
+    x = jnp.zeros(prob.d, prob.A.dtype)
+    objs, nnzs = [], []
+    for i, lam in enumerate(lams):
+        key, sub = jax.random.split(key)
+        p_i = prob._replace(lam=jnp.float32(lam))
+        res = solver(p_i, sub, P, rounds_per_lambda, x)
+        x = res.x
+        objs.append(float(res.trace.objective[-1]))
+        nnzs.append(int(res.trace.nnz[-1]))
+    return PathResult(x=x, lambdas=lams, objectives=np.array(objs), nnz=np.array(nnzs))

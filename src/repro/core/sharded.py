@@ -1,0 +1,121 @@
+"""Distributed Shotgun via shard_map: the multi-pod adaptation (DESIGN §3).
+
+The paper's multicore implementation shares one ``Ax`` vector through atomic
+compare-and-swap.  On an SPMD mesh there is no shared memory; instead:
+
+  * columns of A (features) are sharded over the mesh's devices — axis "f"
+    (the flattened (pod, data, model) production mesh or any 1-D mesh),
+  * every device holds the full residual/margin ``z`` (n,), replicated,
+  * each round, device k samples P_local coordinates from its local shard,
+    computes Shooting updates against the shared ``z``, and contributes
+    Δz_k = A_localᵦ δx_k;  one ``psum`` merges all contributions.
+
+This is *exactly* Alg. 2 with P = P_local × num_devices parallel updates
+(sampling is without replacement across devices by construction — devices
+own disjoint coordinate sets — which only reduces the interference term of
+Lemma 3.3, so Thm 3.2's bound still applies).
+
+The collective cost is one all-reduce of an n-vector per round, independent
+of P — the analogue the roofline analysis in EXPERIMENTS.md tracks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import objectives as obj
+from repro.core.objectives import Problem
+from repro.core.shotgun import Result, Trace
+
+
+def pad_features(A: jax.Array, num_shards: int) -> jax.Array:
+    """Right-pad A with zero columns so d divides evenly across shards.
+
+    Zero columns are fixed points of the update (grad = 0 -> delta = 0), so
+    padding never changes the trajectory of real coordinates.
+    """
+    d = A.shape[1]
+    d_pad = (-d) % num_shards
+    if d_pad:
+        A = jnp.concatenate([A, jnp.zeros((A.shape[0], d_pad), A.dtype)], axis=1)
+    return A
+
+
+def make_feature_mesh(devices=None) -> Mesh:
+    devices = jax.devices() if devices is None else devices
+    import numpy as np
+    return Mesh(np.array(devices), ("f",))
+
+
+@functools.partial(jax.jit, static_argnames=("P_local", "rounds", "mesh",
+                                              "loss", "trace_every"))
+def _sharded_solve(A, y, lam, beta, key, P_local: int, rounds: int,
+                   mesh: Mesh, loss: str, trace_every: int = 1) -> Result:
+    n, d = A.shape
+    nshards = mesh.devices.size
+    d_local = d // nshards
+    assert rounds % trace_every == 0
+
+    def solve_local(A_blk, y_rep, key_blk):
+        # A_blk: (n, d_local) this device's feature shard; y replicated.
+        me = jax.lax.axis_index("f")
+        x_blk = jnp.zeros(d_local, A_blk.dtype)
+        z = A_blk @ x_blk
+        z = jax.lax.psum(z, "f")              # = A x = 0 initially
+
+        def round_fn(carry, key_t):
+            x_l, z = carry
+            key_t = jax.random.fold_in(key_t, me)    # decorrelate shards
+            idx = jax.random.randint(key_t, (P_local,), 0, d_local)
+            r = obj.residual_like(z, y_rep, loss)
+            Ap = A_blk[:, idx]
+            g = Ap.T @ r
+            delta = obj.shooting_delta(x_l[idx], g, lam, beta)
+            x_l = x_l.at[idx].add(delta)
+            dz = Ap @ delta
+            z = z + jax.lax.psum(dz, "f")     # the paper's shared-Ax write
+            return (x_l, z), None
+
+        def outer_fn(carry, keys_k):
+            # trace_every rounds without objective bookkeeping, then one
+            # F(x)/nnz evaluation (2 scalar psums) — the bookkeeping psums
+            # cost as much wire as the dz psum itself when traced per round
+            carry, _ = jax.lax.scan(round_fn, carry, keys_k)
+            x_l, z = carry
+            f_data = obj.data_loss_from_margin(z, y_rep, loss)
+            f_reg = lam * jax.lax.psum(jnp.sum(jnp.abs(x_l)), "f")
+            nnz = jax.lax.psum(jnp.sum(x_l != 0), "f")
+            return carry, (f_data + f_reg, nnz)
+
+        keys = jax.random.split(key_blk, rounds)
+        keys = keys.reshape(rounds // trace_every, trace_every, -1)
+        (x_l, z), (fs, nnzs) = jax.lax.scan(outer_fn, (x_blk, z), keys)
+        return x_l, z, fs, nnzs
+
+    solve = shard_map(
+        solve_local, mesh=mesh,
+        in_specs=(P(None, "f"), P(None), P(None)),
+        out_specs=(P("f"), P(None), P(None), P(None)),
+        check_vma=False,
+    )
+    x, z, fs, nnzs = solve(A, y, key)
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+
+
+def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int,
+                          rounds: int, mesh: Mesh | None = None,
+                          trace_every: int = 1) -> Result:
+    """Distributed Shotgun.  Total parallelism P = P_local * mesh size.
+
+    ``trace_every`` thins the objective bookkeeping (trace length becomes
+    rounds // trace_every) — the update trajectory is unchanged."""
+    mesh = make_feature_mesh() if mesh is None else mesh
+    A = pad_features(prob.A, mesh.devices.size)
+    res = _sharded_solve(A, prob.y, prob.lam, prob.beta, key,
+                         P_local, rounds, mesh, prob.loss, trace_every)
+    return Result(x=res.x[: prob.d], z=res.z, trace=res.trace)

@@ -1,0 +1,143 @@
+"""Shotgun (Alg. 2): parallel stochastic coordinate descent for L1 losses.
+
+Three solvers:
+
+``shooting_solve``     Alg. 1 — sequential SCD (P = 1 special case).
+``shotgun_solve``      Alg. 2 — practical signed form. Each round samples P
+                       coordinates (with replacement, forming the multiset
+                       P_t of the paper) and applies the Shooting update to
+                       all of them from the same iterate; the collective
+                       update is the scatter-add of the per-coordinate deltas,
+                       exactly the paper's Δx.
+``shotgun_dup_solve``  Alg. 2 verbatim on the duplicated-feature positive
+                       orthant form (Eq. 4) with update
+                       δx_j = max(-x_j, -(∇F)_j / β). Used by the theory
+                       tests; fixed points coincide with the signed form.
+
+All maintain z = A x (Sec. 4.1.1's maintained-Ax trick): per round the work
+is O(n·P) instead of O(n·d).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import objectives as obj
+from repro.core.objectives import Problem, DupProblem
+
+
+class Trace(NamedTuple):
+    objective: jax.Array   # (rounds,) F(x^(t)) after round t
+    nnz: jax.Array         # (rounds,) number of non-zeros
+
+
+class Result(NamedTuple):
+    x: jax.Array
+    z: jax.Array           # final margin A x
+    trace: Trace
+
+
+def _sample(key, d, P, replace: bool):
+    if replace:
+        return jax.random.randint(key, (P,), 0, d)
+    return jax.random.choice(key, d, (P,), replace=False)
+
+
+@functools.partial(jax.jit, static_argnames=("P", "rounds", "replace"))
+def shotgun_solve(prob: Problem, key: jax.Array, P: int, rounds: int,
+                  x0: jax.Array | None = None, replace: bool = True) -> Result:
+    """Run `rounds` synchronous Shotgun rounds of P parallel updates each."""
+    A, y, lam, beta = prob.A, prob.y, prob.lam, prob.beta
+    d = A.shape[1]
+    x0 = jnp.zeros(d, A.dtype) if x0 is None else x0
+    z0 = A @ x0
+
+    def round_fn(carry, key_t):
+        x, z = carry
+        idx = _sample(key_t, d, P, replace)
+        r = obj.residual_like(z, y, prob.loss)
+        Ap = A[:, idx]                       # (n, P) gathered columns
+        g = Ap.T @ r                         # (P,) coordinate gradients
+        delta = obj.shooting_delta(x[idx], g, lam, beta)
+        # Collective update Δx: scatter-add sums deltas of duplicate draws,
+        # matching the multiset semantics of Alg. 2.
+        x = x.at[idx].add(delta)
+        z = z + Ap @ delta
+        f = obj.objective_from_margin(z, x, prob)
+        nnz = jnp.sum(x != 0)
+        return (x, z), (f, nnz)
+
+    keys = jax.random.split(key, rounds)
+    (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+
+
+def shooting_solve(prob: Problem, key: jax.Array, rounds: int,
+                   x0: jax.Array | None = None) -> Result:
+    """Alg. 1: sequential SCD = Shotgun with P = 1."""
+    return shotgun_solve(prob, key, P=1, rounds=rounds, x0=x0)
+
+
+# ---------------------------------------------------------------------------
+# Theory-faithful duplicated-feature form (Eq. 4 / Alg. 2 verbatim)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("P", "rounds"))
+def shotgun_dup_solve(dp: DupProblem, key: jax.Array, P: int, rounds: int,
+                      xhat0: jax.Array | None = None) -> Result:
+    """Alg. 2 on min_{x̂ >= 0} Σ L(â_i^T x̂) + λ Σ x̂_j with â = [a; -a].
+
+    ∇F(x̂)_j = â_j^T r + λ  and  δx̂_j = max(-x̂_j, -(∇F)_j / β).
+    """
+    A, y, lam, beta = dp.A, dp.y, dp.lam, dp.beta
+    n, d = A.shape
+    d2 = 2 * d
+    xhat0 = jnp.zeros(d2, A.dtype) if xhat0 is None else xhat0
+    z0 = A @ (xhat0[:d] - xhat0[d:])
+
+    def round_fn(carry, key_t):
+        xhat, z = carry
+        idx = jax.random.randint(key_t, (P,), 0, d2)   # multiset P_t
+        r = obj.residual_like(z, y, dp.loss)
+        sign = jnp.where(idx < d, 1.0, -1.0)            # column of [A, -A]
+        Ap = A[:, idx % d] * sign[None, :]              # (n, P)
+        g = Ap.T @ r + lam                              # (∇F)_j, Eq. 5 context
+        delta = jnp.maximum(-xhat[idx], -g / beta)      # Eq. 5
+        xhat = xhat.at[idx].add(delta)
+        # Parallel same-coordinate updates may overshoot below 0; the paper's
+        # write-conflict note (end of Sec. 3.1) permits clipping to keep
+        # x̂ >= 0 — a no-op unless the multiset collides.
+        xhat = jnp.maximum(xhat, 0.0)
+        z = A @ (xhat[:d] - xhat[d:])
+        f = obj.data_loss_from_margin(z, y, dp.loss) + lam * jnp.sum(xhat)
+        nnz = jnp.sum(obj.dup_to_signed(xhat) != 0)
+        return (xhat, z), (f, nnz)
+
+    keys = jax.random.split(key, rounds)
+    (xhat, z), (fs, nnzs) = jax.lax.scan(round_fn, (xhat0, z0), keys)
+    return Result(x=xhat, z=z, trace=Trace(objective=fs, nnz=nnzs))
+
+
+# ---------------------------------------------------------------------------
+# Convergence utilities
+# ---------------------------------------------------------------------------
+
+def rounds_to_tolerance(trace_objective, f_star, rel_tol=0.005):
+    """First round index with F within rel_tol of F* (paper's 0.5% criterion).
+
+    Returns len(trace) if never reached (incl. divergence).
+    """
+    f0 = trace_objective[0]
+    target = f_star + rel_tol * jnp.abs(f_star)
+    hit = trace_objective <= target
+    idx = jnp.argmax(hit)
+    reached = jnp.any(hit)
+    return jnp.where(reached, idx, trace_objective.shape[0])
+
+
+def diverged(trace_objective) -> jax.Array:
+    last = trace_objective[-1]
+    return jnp.isnan(last) | jnp.isinf(last) | (last > 1e3 * jnp.abs(trace_objective[0]) + 1e3)

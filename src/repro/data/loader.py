@@ -1,0 +1,62 @@
+"""Sharded, deterministic, resumable batch loader (DESIGN §7).
+
+Stateless-by-construction: ``batch_at(step)`` derives the batch purely from
+(seed, step), so
+
+  * restart at step k reproduces batch k bitwise (auto-resume correctness),
+  * every host computes only its slice — no coordinator, no queues,
+  * per-device work is equal-sized by padding, which keeps bulk-synchronous
+    steps straggler-free by design.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LoaderConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    induction_period: int = 8     # synthetic learnable structure
+    induction_prob: float = 0.5
+
+
+class TokenLoader:
+    """Deterministic synthetic LM token stream, shardable by (host, step)."""
+
+    def __init__(self, cfg: LoaderConfig, *, host_id: int = 0, num_hosts: int = 1):
+        assert cfg.global_batch % num_hosts == 0
+        self.cfg = cfg
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.local_batch = cfg.global_batch // num_hosts
+        ranks = np.arange(1, cfg.vocab_size + 1)
+        p = 1.0 / ranks
+        self._probs = p / p.sum()
+
+    def batch_at(self, step: int):
+        """(tokens, labels), each (local_batch, seq_len) int32 — pure in
+        (seed, step, host_id)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, self.host_id]))
+        toks = rng.choice(cfg.vocab_size, size=(self.local_batch, cfg.seq_len + 1),
+                          p=self._probs)
+        rep = rng.random((self.local_batch, cfg.seq_len + 1)) < cfg.induction_prob
+        k = cfg.induction_period
+        toks[:, k:] = np.where(rep[:, k:], toks[:, :-k], toks[:, k:])
+        toks = toks.astype(np.int32)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

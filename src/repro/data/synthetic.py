@@ -1,0 +1,110 @@
+"""Synthetic dataset generators mirroring the paper's four Lasso categories
+(Sec. 4.1.3) plus logistic-regression regimes (Sec. 4.2.3) and LM token
+streams for the architecture substrate.
+
+Categories (sizes are scaled-down defaults; pass n/d for bigger):
+  sparco            real-valued, mixed sparsity (wavelet-ish random designs)
+  singlepixcam      dense +-1 compressed-sensing measurements of a sparse image
+  sparse_imaging    very sparse random -1/+1 measurement matrices
+  large_sparse      bigram-bag style: very sparse, heavy-tailed column norms
+
+Each returns (A, y, x_true).  Columns are NOT pre-normalized; use
+``objectives.make_problem(..., normalize=True)``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _sparse_signal(rng, d, nnz_frac):
+    x = np.zeros(d, np.float32)
+    k = max(1, int(d * nnz_frac))
+    idx = rng.choice(d, k, replace=False)
+    x[idx] = rng.standard_normal(k).astype(np.float32) * 2.0
+    return x
+
+
+def sparco(seed=0, n=1024, d=2048, nnz_frac=0.05, noise=0.01, corr=0.0):
+    """Random dense design with optional AR(1)-style column correlation.
+
+    ``corr`` interpolates between iid columns (rho ~ d/n+1) and strongly
+    correlated ones (rho -> d) — used to produce the two regimes of Fig. 2.
+    """
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal((n, d)).astype(np.float32)
+    if corr > 0:
+        common = rng.standard_normal((n, 1)).astype(np.float32)
+        base = (1 - corr) * base + corr * common
+    x = _sparse_signal(rng, d, nnz_frac)
+    y = base @ x + noise * rng.standard_normal(n).astype(np.float32)
+    return base, y, x
+
+
+def singlepixcam(seed=0, n=410, d=1024, nnz_frac=0.05, noise=0.005):
+    """Dense +-1 Bernoulli measurement matrix (Duarte et al. 2008 style)."""
+    rng = np.random.default_rng(seed)
+    A = rng.choice([-1.0, 1.0], size=(n, d)).astype(np.float32) / np.sqrt(n)
+    x = _sparse_signal(rng, d, nnz_frac)
+    y = A @ x + noise * rng.standard_normal(n).astype(np.float32)
+    return A, y, x
+
+
+def sparse_imaging(seed=0, n=954, d=4096, density=0.01, nnz_frac=0.02, noise=0.005):
+    """Very sparse random -1/+1 measurement matrix."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, d)) < density
+    signs = rng.choice([-1.0, 1.0], size=(n, d))
+    A = (mask * signs).astype(np.float32)
+    x = _sparse_signal(rng, d, nnz_frac)
+    y = A @ x + noise * rng.standard_normal(n).astype(np.float32)
+    return A, y, x
+
+
+def large_sparse(seed=0, n=2048, d=16384, density=0.002, nnz_frac=0.005, noise=0.01):
+    """Bag-of-bigrams flavor: sparse nonnegative counts, heavy-tailed."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, d)) < density
+    vals = rng.exponential(1.0, size=(n, d))
+    A = (mask * vals).astype(np.float32)
+    x = _sparse_signal(rng, d, nnz_frac)
+    y = A @ x + noise * rng.standard_normal(n).astype(np.float32)
+    return A, y, x
+
+
+def logistic_data(seed=0, n=4096, d=512, nnz_frac=0.05, flip=0.02):
+    """Labels in {-1,+1} from a sparse linear teacher (zeta/rcv1 regimes)."""
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((n, d)).astype(np.float32)
+    x = _sparse_signal(rng, d, nnz_frac)
+    p = 1.0 / (1.0 + np.exp(-(A @ x)))
+    y = np.where(rng.random(n) < p, 1.0, -1.0).astype(np.float32)
+    flips = rng.random(n) < flip
+    y = np.where(flips, -y, y)
+    return A, y, x
+
+
+CATEGORIES = {
+    "sparco": sparco,
+    "singlepixcam": singlepixcam,
+    "sparse_imaging": sparse_imaging,
+    "large_sparse": large_sparse,
+}
+
+
+# ---------------------------------------------------------------------------
+# LM token stream (for the architecture substrate's end-to-end training)
+# ---------------------------------------------------------------------------
+
+def lm_token_batches(seed, vocab_size, batch, seq_len, num_batches):
+    """Deterministic synthetic token stream; a Zipfian unigram model with a
+    short induction pattern so a small LM measurably learns something."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab_size + 1)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    for b in range(num_batches):
+        toks = rng.choice(vocab_size, size=(batch, seq_len + 1), p=probs)
+        # induction: token t repeats 8 steps later with prob 1/2
+        rep = rng.random((batch, seq_len + 1)) < 0.5
+        toks[:, 8:] = np.where(rep[:, 8:], toks[:, :-8], toks[:, 8:])
+        yield toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)

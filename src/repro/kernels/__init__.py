@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (Block-Shotgun)."""
+from repro.kernels.shotgun_block import (BLOCK, TILE_N, gather_block_matvec,
+                                         scatter_block_update)
+from repro.kernels.ops import block_shotgun_round, block_shotgun_solve, pad_problem

@@ -1,0 +1,92 @@
+"""Public jit'd wrappers around the Pallas Block-Shotgun kernels.
+
+``block_shotgun_round``  one synchronous round: K random aligned blocks of
+                         128 coordinates updated in parallel (P_eff = K·128).
+``block_shotgun_solve``  full solver built on the kernels (scan over rounds).
+
+On CPU (this container) pass ``interpret=True``; on TPU the same code path
+compiles to Mosaic.  ``ref.py`` holds the pure-jnp oracles used by the tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import objectives as obj
+from repro.core.objectives import Problem
+from repro.core.shotgun import Result, Trace
+from repro.kernels.shotgun_block import (BLOCK, TILE_N, gather_block_matvec,
+                                         scatter_block_update)
+
+
+def pad_problem(A, y, block=BLOCK, tile_n=TILE_N):
+    """Zero-pad A to (n % tile_n == 0, d % block == 0).  Zero rows contribute
+    nothing to gradients if y is padded with zeros *and* the loss is the
+    squared loss; for logistic we pad with a sample-weight mask instead."""
+    n, d = A.shape
+    n_pad = (-n) % tile_n
+    d_pad = (-d) % block
+    if n_pad or d_pad:
+        A = jnp.pad(A, ((0, n_pad), (0, d_pad)))
+        y = jnp.pad(y, (0, n_pad))
+    mask = jnp.pad(jnp.ones(n, A.dtype), (0, n_pad))
+    return A, y, mask
+
+
+@functools.partial(jax.jit, static_argnames=("block", "loss", "interpret"))
+def block_shotgun_round(A, z, x, blk_idx, lam, beta, y, mask,
+                        loss: str = obj.LASSO, block: int = BLOCK,
+                        interpret: bool = False):
+    """One Block-Shotgun round.  Returns (x_new, z_new, delta)."""
+    r = obj.residual_like(z, y, loss) * mask
+    g = gather_block_matvec(A, r, blk_idx, block=block, interpret=interpret)
+    d = x.shape[0]
+    xb = x.reshape(d // block, block)
+    x_sel = jnp.take(xb, blk_idx, axis=0)
+    x_new_sel = obj.soft_threshold(x_sel - g / beta, lam / beta)
+    delta = x_new_sel - x_sel
+    z_new = scatter_block_update(A, z, blk_idx, delta, block=block,
+                                 interpret=interpret)
+    xb = xb.at[blk_idx].add(delta)
+    return xb.reshape(d), z_new, delta
+
+
+@functools.partial(jax.jit, static_argnames=("K", "rounds", "block", "loss", "interpret"))
+def _solve(A, y, mask, lam, beta, key, K, rounds, block, loss, interpret):
+    n, d = A.shape
+    nblk = d // block
+    x0 = jnp.zeros(d, A.dtype)
+    z0 = jnp.zeros(n, A.dtype)
+
+    def round_fn(carry, key_t):
+        x, z = carry
+        blk_idx = jax.random.choice(key_t, nblk, (K,), replace=False)
+        x, z, _ = block_shotgun_round(A, z, x, blk_idx, lam, beta, y, mask,
+                                      loss=loss, block=block,
+                                      interpret=interpret)
+        r = obj.residual_like(z, y, loss) * mask
+        if loss == obj.LASSO:
+            f = 0.5 * jnp.vdot(z - y, (z - y) * mask) + lam * jnp.sum(jnp.abs(x))
+        else:
+            f = jnp.sum(mask * jnp.logaddexp(0.0, -y * z)) + lam * jnp.sum(jnp.abs(x))
+        return (x, z), (f, jnp.sum(x != 0))
+
+    keys = jax.random.split(key, rounds)
+    (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+
+
+def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
+                        block: int = BLOCK, interpret: bool = True) -> Result:
+    """TPU-native Shotgun: K parallel blocks of `block` coordinates/round.
+
+    Effective parallelism P = K * block must respect Thm 3.2's
+    P < d/rho + 1 (checked by the caller via ``core.spectral.p_star``).
+    """
+    A, y, mask = pad_problem(prob.A, prob.y)
+    res = _solve(A, y, mask, prob.lam, prob.beta, key, K, rounds, block,
+                 prob.loss, interpret)
+    return Result(x=res.x[: prob.d], z=res.z, trace=res.trace)

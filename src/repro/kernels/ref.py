@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_block_matvec_ref(A, r, blk_idx, block: int):
+    """g[k] = A[:, blk_k*B:(blk_k+1)*B]^T r  for each selected block k.
+
+    A: (n, d) with d % block == 0;  r: (n,);  blk_idx: (K,) int32.
+    Returns (K, block) float32.
+    """
+    d = A.shape[1]
+    Ab = A.reshape(A.shape[0], d // block, block)       # (n, nblk, B)
+    Ak = jnp.take(Ab, blk_idx, axis=1)                  # (n, K, B)
+    return jnp.einsum("nkb,n->kb", Ak.astype(jnp.float32),
+                      r.astype(jnp.float32))
+
+
+def scatter_block_update_ref(A, z, blk_idx, delta, block: int):
+    """z_new = z + sum_k A[:, blk_k] @ delta[k].
+
+    delta: (K, block).  Returns z_new with z's dtype, f32 accumulation.
+    """
+    d = A.shape[1]
+    Ab = A.reshape(A.shape[0], d // block, block)
+    Ak = jnp.take(Ab, blk_idx, axis=1)                  # (n, K, B)
+    dz = jnp.einsum("nkb,kb->n", Ak.astype(jnp.float32),
+                    delta.astype(jnp.float32))
+    return (z.astype(jnp.float32) + dz).astype(z.dtype)
+
+
+def block_shotgun_round_ref(A, z, x, blk_idx, lam, beta, y, loss, block: int):
+    """One full Block-Shotgun round (oracle for ops.block_shotgun_round)."""
+    from repro.core import objectives as obj
+    r = obj.residual_like(z, y, loss)
+    g = gather_block_matvec_ref(A, r, blk_idx, block)   # (K, B)
+    d = x.shape[0]
+    xb = x.reshape(d // block, block)
+    x_sel = jnp.take(xb, blk_idx, axis=0)               # (K, B)
+    x_new = obj.soft_threshold(x_sel - g / beta, lam / beta)
+    delta = x_new - x_sel
+    z_new = scatter_block_update_ref(A, z, blk_idx, delta, block)
+    xb = xb.at[blk_idx].add(delta)
+    return xb.reshape(d), z_new, delta

@@ -1,0 +1,128 @@
+"""Pallas TPU kernels for Block-Shotgun (DESIGN.md §4).
+
+The paper's per-update hot loop (read column j, dot with residual, soft
+threshold, write back to the shared Ax) is memory-wall bound on multicore:
+O(1) flops per byte (Sec. 4.3).  The TPU adaptation updates an *aligned
+block of 128 coordinates* at a time so that
+
+  * the random column gather becomes a contiguous VMEM DMA whose source
+    block is selected by a scalar-prefetched index (`PrefetchScalarGridSpec`
+    index_map) — no scalar scatter/gather,
+  * the gradient gather g_B = A_B^T r and the margin update z += A_B δ are
+    (TILE_N × 128) MXU matmuls — arithmetic intensity O(128) flops/byte.
+
+Two kernels, both tiled over the sample dimension n:
+
+  gather_block_matvec   g[k] = A[:, blk_k]ᵀ r        grid (K, T), accumulate over T
+  scatter_block_update  z   += Σ_k A[:, blk_k] δ_k    grid (T, K), accumulate over K
+
+Block size B = 128 (MXU/lane width); TILE_N default 512 keeps the f32
+working set (512·128·4B · 2 operands · 2 buffers ≈ 1 MB) comfortably in
+the ~16 MB VMEM budget with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 128        # coordinate block width (MXU dimension)
+TILE_N = 512       # sample-dimension tile
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: g[k] = A[:, blk_k*B:(blk_k+1)*B]^T r
+# ---------------------------------------------------------------------------
+
+def _gather_matvec_kernel(idx_ref, a_ref, r_ref, g_ref):
+    # grid = (K, T); T (sample tiles) is the fast axis -> accumulate into g[k].
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    a = a_ref[...]                       # (TILE_N, B)
+    r = r_ref[...]                       # (TILE_N, 1)
+    # MXU: (B, TILE_N) @ (TILE_N, 1) with f32 accumulation
+    contrib = jax.lax.dot_general(
+        a, r, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (B, 1)
+    g_ref[...] += contrib.reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile_n", "interpret"))
+def gather_block_matvec(A, r, blk_idx, block: int = BLOCK,
+                        tile_n: int = TILE_N, interpret: bool = False):
+    """g (K, block) = per-selected-block column gradients A_Bᵀ r."""
+    n, d = A.shape
+    assert d % block == 0 and n % tile_n == 0, (n, d, block, tile_n)
+    K = blk_idx.shape[0]
+    T = n // tile_n
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K, T),
+        in_specs=[
+            pl.BlockSpec((tile_n, block), lambda k, t, idx: (t, idx[k])),
+            pl.BlockSpec((tile_n, 1), lambda k, t, idx: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda k, t, idx: (k, 0)),
+    )
+    return pl.pallas_call(
+        _gather_matvec_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, block), jnp.float32),
+        interpret=interpret,
+    )(blk_idx, A, r.reshape(n, 1))
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: z += sum_k A[:, blk_k] @ delta_k   (the shared-Ax write)
+# ---------------------------------------------------------------------------
+
+def _scatter_update_kernel(idx_ref, a_ref, d_ref, z_ref, out_ref):
+    # grid = (T, K); K is the fast axis -> accumulate into out[t].
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = z_ref[...].astype(jnp.float32)
+
+    a = a_ref[...]                       # (TILE_N, B)
+    dlt = d_ref[...]                     # (1, B)
+    contrib = jax.lax.dot_general(
+        a, dlt, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (TILE_N, 1)
+    out_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile_n", "interpret"))
+def scatter_block_update(A, z, blk_idx, delta, block: int = BLOCK,
+                         tile_n: int = TILE_N, interpret: bool = False):
+    """z_new = z + Σ_k A[:, blk_k] δ_k  — f32 accumulation, z.dtype out."""
+    n, d = A.shape
+    assert d % block == 0 and n % tile_n == 0
+    K = blk_idx.shape[0]
+    T = n // tile_n
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, K),
+        in_specs=[
+            pl.BlockSpec((tile_n, block), lambda t, k, idx: (t, idx[k])),
+            pl.BlockSpec((1, block), lambda t, k, idx: (k, 0)),
+            pl.BlockSpec((tile_n, 1), lambda t, k, idx: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), lambda t, k, idx: (t, 0)),
+    )
+    out = pl.pallas_call(
+        _scatter_update_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(blk_idx, A, delta.astype(A.dtype), z.reshape(n, 1))
+    return out.reshape(n).astype(z.dtype)

@@ -1,0 +1,399 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell
+against ShapeDtypeStruct stand-ins, then extract the three roofline terms
+(EXPERIMENTS.md §Roofline) from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are cached as JSON under benchmarks/results/dryrun/.
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.configs.common import SHAPES
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import sharding as SH
+from repro.models import steps as S
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (1 link assumed — conservative)
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s32|u32|s8|u8|pred|s64|u64)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+               "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+DTYPE_BYTES.update({f"f8e{k}": 1 for k in ["4m3", "5m2", "4m3fn", "5m2fnuz", "4m3fnuz", "4m3b11fnuz", "3m4"]})
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        size = DTYPE_BYTES.get(dt, 2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * size
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (partitioned,
+    per-device) HLO.  Approximates wire traffic per device: exact for
+    all-gather results, ~2x-under for ring all-reduce (noted in DESIGN)."""
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        out[op] = out.get(op, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+def model_flops(cfg, seq, batch, kind) -> float:
+    """6*N_active*D (train) / 2*N_active*D (inference)."""
+    shapes = SP.param_specs_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0
+    for path, leaf in flat:
+        pstr = SH._path_str(path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "embed" in pstr or "head" in pstr:
+            continue   # 6ND convention: exclude embedding/unembedding
+        if "moe/" in pstr and "router" not in pstr:
+            n = n * cfg.moe_top_k // max(cfg.num_experts, 1)
+        active += n
+    tokens = batch * (1 if kind == "decode" else seq)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * tokens, total, active
+
+
+def build_lowerable(cfg, shape_name, mesh, policy: SH.ShardingPolicy,
+                    grad_accum=None):
+    """Returns (fn, args, in_shardings) ready for jax.jit(...).lower()."""
+    info = SHAPES[shape_name]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    dev = mesh.devices.size
+    ns = lambda spec: jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+
+    pshapes = SP.param_specs_shapes(cfg)
+    pspecs = SH.param_specs(pshapes, mesh, policy)
+
+    if kind == "train":
+        if grad_accum is None:
+            grad_accum = 8 if cfg.d_model >= 8192 else 4
+        state_shapes = jax.eval_shape(
+            lambda: S.init_train_state(cfg, jax.random.PRNGKey(0)))
+        sspecs = SH.train_state_specs(state_shapes, pspecs, mesh)
+        bshapes = SP.train_batch_specs(cfg, seq, batch)
+        bspecs = SH.batch_specs(bshapes, mesh, policy)
+        fn = S.make_train_step(cfg, grad_accum=grad_accum)
+        args = (state_shapes, bshapes)
+        shardings = (ns(sspecs), ns(bspecs))
+        return fn, args, shardings
+
+    if kind == "prefill":
+        bshapes = SP.prefill_batch_specs(cfg, seq, batch)
+        bspecs = SH.batch_specs(bshapes, mesh, policy)
+        fn = S.make_prefill_step(cfg, cache_len=seq)
+        args = (pshapes, bshapes)
+        return fn, args, (ns(pspecs), ns(bspecs))
+
+    # decode
+    dec_specs = SP.decode_arg_specs(cfg, seq, batch)
+    cache_shapes = dec_specs["cache"]
+    cspecs = SH.cache_specs(cache_shapes, mesh, policy)
+    tok_spec = SH.batch_specs({"tokens": dec_specs["tokens"]}, mesh, policy)["tokens"]
+    raw_step = S.make_decode_step(cfg)
+
+    extra_args, extra_specs = [], []
+    if cfg.is_encdec:
+        extra_args.append(dec_specs["enc_out"])
+        extra_specs.append(SH.batch_specs(
+            {"x": dec_specs["enc_out"]}, mesh, policy)["x"])
+    if cfg.mrope:
+        extra_args.append(dec_specs["positions3"])
+        extra_specs.append(SH.batch_specs(
+            {"x": dec_specs["positions3"]}, mesh, policy)["x"])
+
+    def fn(params, tokens, cache, pos, *extras):
+        i = 0
+        enc_out = positions3 = None
+        if cfg.is_encdec:
+            enc_out = extras[i]; i += 1
+        if cfg.mrope:
+            positions3 = extras[i]; i += 1
+        return raw_step(params, tokens, cache, pos,
+                        enc_out=enc_out, positions3=positions3)
+
+    args = (pshapes, dec_specs["tokens"], cache_shapes, dec_specs["pos"],
+            *extra_args)
+    shardings = (ns(pspecs), ns(tok_spec), ns(cspecs), ns(P()),
+                 *[ns(s) for s in extra_specs])
+    return fn, args, shardings
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             policy: SH.ShardingPolicy | None = None, tag: str = "baseline",
+             force: bool = False) -> dict:
+    mod = ARCHS[arch]
+    supports = mod.SUPPORTS[shape_name]
+    out_path = RESULTS / f"{arch}__{shape_name}__{mesh_kind}__{tag}.json"
+    if isinstance(supports, str):   # skip with reason
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skip", "reason": supports}
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = mod.CONFIG
+    policy = policy or SH.ShardingPolicy()
+    if SHAPES[shape_name]["kind"] == "decode":
+        # production default: decode caches are kv-seq-sharded (§Perf cell 4)
+        policy = dataclasses.replace(policy, cache_seq_on_tensor=True)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    info = SHAPES[shape_name]
+
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+           "policy": dataclasses.asdict(policy), "devices": mesh.devices.size}
+    try:
+        fn, args, in_shardings = build_lowerable(cfg, shape_name, mesh, policy)
+        with mesh, SH.activation_axes(mesh, policy):
+            lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        mf, n_total, n_active = model_flops(cfg, info["seq"], info["batch"],
+                                            info["kind"])
+        dev = mesh.devices.size
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        coll_total = float(sum(coll.values()))
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower - t0, 1),
+            "compile_s": round(t_compile - t_lower, 1),
+            "hlo_flops_per_device": flops,
+            "hlo_bytes_per_device": bytes_acc,
+            "collective_bytes_per_device": coll_total,
+            "collectives": coll,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+            "terms": {
+                "compute_s": flops / PEAK_FLOPS,
+                "memory_s": bytes_acc / HBM_BW,
+                "collective_s": coll_total / ICI_BW,
+            },
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / dev,
+            "params_total": n_total,
+            "params_active": n_active,
+            "useful_flops_ratio": (mf / dev) / flops if flops else 0.0,
+        })
+        terms = rec["terms"]
+        rec["bottleneck"] = max(terms, key=terms.get)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a recorded bug
+        import traceback
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Roofline measurement: XLA's cost analysis visits each while-loop body ONCE,
+# so the scanned full-depth build under-counts flops/bytes by ~num_groups x
+# grad_accum.  Unrolling the full depth is accurate but compiles for minutes
+# per cell (measured 260s for 36 layers).  Instead: lower UNROLLED 1-group
+# and 2-group variants (seconds each), fit cost = overhead + G * per_group,
+# and extrapolate to the real depth.  Exact for costs linear in depth — which
+# layer flops/bytes/collectives are (embed/head/loss/optimizer live in the
+# overhead term).
+# ---------------------------------------------------------------------------
+
+def _cost_once(cfg, shape_name, mesh, policy):
+    fn, args, shardings = build_lowerable(cfg, shape_name, mesh, policy,
+                                          grad_accum=1)
+    with mesh, SH.activation_axes(mesh, policy):
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": {k: float(v) for k, v in coll.items()},
+    }
+
+
+def _shallow(cfg, k: int):
+    kw = dict(num_layers=k * len(cfg.pattern), unroll_scan=True)
+    if cfg.encoder_layers:
+        # whisper: encoder depth == decoder depth, so scaling both keeps the
+        # per-increment delta = (enc layer + dec layer) and the extrapolation
+        # to the common depth exact
+        kw["encoder_layers"] = k
+    return dataclasses.replace(cfg, **kw)
+
+
+def measure_cell(arch: str, shape_name: str, mesh_kind: str = "single",
+                 policy: SH.ShardingPolicy | None = None,
+                 tag: str = "roofline", force: bool = False,
+                 cfg_override=None) -> dict:
+    mod = ARCHS[arch]
+    supports = mod.SUPPORTS[shape_name]
+    out_path = RESULTS / f"{arch}__{shape_name}__{mesh_kind}__{tag}.json"
+    if isinstance(supports, str):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "tag": tag, "status": "skip", "reason": supports}
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = cfg_override or mod.CONFIG
+    policy = policy or SH.ShardingPolicy()
+    if SHAPES[shape_name]["kind"] == "decode":
+        policy = dataclasses.replace(policy, cache_seq_on_tensor=True)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    info = SHAPES[shape_name]
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+           "policy": dataclasses.asdict(policy), "devices": mesh.devices.size,
+           "method": "unrolled 2-point layer extrapolation, grad_accum=1"}
+    try:
+        c1 = _cost_once(_shallow(cfg, 1), shape_name, mesh, policy)
+        c2 = _cost_once(_shallow(cfg, 2), shape_name, mesh, policy)
+        G = cfg.num_groups
+
+        def extrap(a, b):
+            # clamp: compile-noise can make the 2-group build cheaper than
+            # the 1-group one on tiny (decode) programs; costs are
+            # monotone in depth, so never extrapolate below the 2-group value
+            per = b - a
+            return max(max(a - per, 0.0) + G * per, b, 0.0)
+
+        flops = extrap(c1["flops"], c2["flops"])
+        bytes_acc = extrap(c1["bytes"], c2["bytes"])
+        coll = {}
+        for op in set(c1["coll"]) | set(c2["coll"]):
+            coll[op] = extrap(c1["coll"].get(op, 0.0), c2["coll"].get(op, 0.0))
+        coll_total = sum(coll.values())
+        mf, n_total, n_active = model_flops(cfg, info["seq"], info["batch"],
+                                            info["kind"])
+        dev = mesh.devices.size
+        rec.update({
+            "status": "ok",
+            "measure_s": round(time.time() - t0, 1),
+            "hlo_flops_per_device": flops,
+            "hlo_bytes_per_device": bytes_acc,
+            "collective_bytes_per_device": coll_total,
+            "collectives": coll,
+            "one_group": c1, "two_group": c2, "num_groups": G,
+            "terms": {
+                "compute_s": flops / PEAK_FLOPS,
+                "memory_s": bytes_acc / HBM_BW,
+                "collective_s": coll_total / ICI_BW,
+            },
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / dev,
+            "params_total": n_total,
+            "params_active": n_active,
+            "useful_flops_ratio": (mf / dev) / flops if flops else 0.0,
+        })
+        terms = rec["terms"]
+        rec["bottleneck"] = max(terms, key=terms.get)
+        rec["step_time_s"] = max(terms.values())
+        rec["roofline_fraction"] = terms["compute_s"] / rec["step_time_s"]
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--measure", action="store_true",
+                    help="accurate roofline terms via unrolled 2-point "
+                         "layer extrapolation (default: compile-proof run)")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                if args.measure:
+                    tag = args.tag if args.tag != "baseline" else "roofline"
+                    rec = measure_cell(arch, shape, mk, tag=tag,
+                                       force=args.force)
+                else:
+                    rec = run_cell(arch, shape, mk, tag=args.tag,
+                                   force=args.force)
+                status = rec["status"]
+                if status == "ok":
+                    t = rec["terms"]
+                    print(f"[{status}] {arch} {shape} {mk}: "
+                          f"compute {t['compute_s']:.3e}s memory {t['memory_s']:.3e}s "
+                          f"collective {t['collective_s']:.3e}s -> {rec['bottleneck']}"
+                          f" ({rec.get('compile_s', rec.get('measure_s', 0))}s)",
+                          flush=True)
+                elif status == "skip":
+                    print(f"[skip] {arch} {shape} {mk}: {rec['reason'][:60]}", flush=True)
+                else:
+                    failures += 1
+                    print(f"[ERR ] {arch} {shape} {mk}: {rec['error']}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

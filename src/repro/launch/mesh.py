@@ -1,0 +1,31 @@
+"""Production mesh factory.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — 'pod' is pure DP
+(+ ZeRO sharding of params/optimizer state across it when fsdp is on).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Elastic variant: any (shape, axes); used by tests and the trainer."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Mesh over whatever devices exist (CPU smoke / small runs)."""
+    n = len(jax.devices())
+    data = n // model if data is None else data
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,158 @@
+"""Batched serving driver: prefill + decode with continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --requests 12 --batch 4 --max-new 24
+
+Design (vLLM-style, sized to this container):
+  * fixed decode batch of B slots over a shared fixed-length KV cache,
+  * each slot holds one request; when a request finishes (EOS / max-new),
+    the slot is immediately refilled from the queue by prefilling the new
+    prompt *into that slot only* — one slow request never blocks the batch
+    (straggler mitigation at the serving layer),
+  * prefill writes the prompt's KV into the slot; decode steps all slots
+    in lock-step with per-slot positions.
+
+Per-slot cache insertion uses a batch-index dynamic-update; position ids are
+per-slot so requests at different depths coexist in one decode step.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (L,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg, *, batch: int, max_len: int, eos_id: int = 0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.params = M.init(cfg, jax.random.PRNGKey(seed))
+        self.cache = M.init_cache(cfg, batch, max_len)
+        self.pos = jnp.zeros(batch, jnp.int32)       # next position per slot
+        self.slots: list[Request | None] = [None] * batch
+
+        cfgc = cfg
+
+        @jax.jit
+        def _prefill_into(params, cache, tokens, slot, cur_pos):
+            """Prefill one prompt (1, L) and splice its KV into `slot`."""
+            logits, new_cache = M.forward(cfgc, params, {"tokens": tokens},
+                                          make_cache_len=self.max_len)
+
+            def splice(full, one):
+                if one is None or full is None:
+                    return full
+                return jax.lax.dynamic_update_index_in_dim(
+                    full, jax.lax.dynamic_index_in_dim(one, 0, 1, keepdims=False),
+                    slot, 1)
+            cache = jax.tree.map(splice, cache, new_cache,
+                                 is_leaf=lambda x: x is None)
+            return logits[:, -1], cache
+
+        @jax.jit
+        def _decode(params, cache, toks, pos):
+            """toks (B,1); per-slot positions pos (B,)."""
+            logits, cache = M.decode_step(cfgc, params, toks, cache, pos[:, None])
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+
+        self._prefill_into = _prefill_into
+        self._decode = _decode
+
+    def admit(self, req: Request, slot: int):
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        last_logits, self.cache = self._prefill_into(
+            self.params, self.cache, toks, slot, self.pos)
+        first = int(jnp.argmax(last_logits[0]))
+        req.out.append(first)
+        self.slots[slot] = req
+        self.pos = self.pos.at[slot].set(len(req.prompt))
+
+    def step(self):
+        toks = jnp.array([[r.out[-1] if r else 0] for r in self.slots], jnp.int32)
+        nxt, self.cache = self._decode(self.params, self.cache, toks, self.pos)
+        self.pos = self.pos + jnp.array(
+            [1 if r and not r.done else 0 for r in self.slots], jnp.int32)
+        for i, r in enumerate(self.slots):
+            if r is None or r.done:
+                continue
+            t = int(nxt[i])
+            r.out.append(t)
+            if t == self.eos_id or len(r.out) >= r.max_new:
+                r.done = True
+
+    def free_slots(self):
+        return [i for i, r in enumerate(self.slots) if r is None or r.done]
+
+
+def serve(arch: str, *, requests: int = 12, batch: int = 4, max_new: int = 24,
+          prompt_len: int = 16, max_len: int = 128, seed: int = 0,
+          smoke: bool = True, quiet: bool = False):
+    mod = ARCHS[arch]
+    cfg = mod.smoke_config() if smoke else mod.CONFIG
+    if cfg.is_encdec:
+        raise SystemExit("serve: use LM archs (whisper needs audio frontend)")
+    eng = Engine(cfg, batch=batch, max_len=max_len, seed=seed)
+    rng = np.random.default_rng(seed)
+    queue = [Request(i, rng.integers(1, cfg.vocab_size, prompt_len,
+                                     dtype=np.int32), max_new)
+             for i in range(requests)]
+    finished: list[Request] = []
+    t0 = time.time()
+    steps = 0
+    while queue or any(r and not r.done for r in eng.slots):
+        for slot in eng.free_slots():
+            old = eng.slots[slot]
+            if old is not None and old.done:
+                finished.append(old)
+                eng.slots[slot] = None
+            if queue:
+                eng.admit(queue.pop(0), slot)   # continuous batching refill
+        if any(r and not r.done for r in eng.slots):
+            eng.step()
+            steps += 1
+    finished.extend(r for r in eng.slots if r is not None)
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in finished)
+    if not quiet:
+        for r in sorted(finished, key=lambda r: r.rid):
+            print(f"[serve] req {r.rid}: {len(r.out)} tokens "
+                  f"{'(eos)' if r.out and r.out[-1] == eng.eos_id else ''}")
+        print(f"[serve] {len(finished)} requests, {toks} tokens, "
+              f"{steps} decode steps, {dt:.2f}s ({toks/max(dt,1e-9):.1f} tok/s)")
+    return finished
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=sorted(ARCHS))
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    a = ap.parse_args()
+    serve(a.arch, requests=a.requests, batch=a.batch, max_new=a.max_new,
+          prompt_len=a.prompt_len, max_len=a.max_len)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell — the
+dry-run lowers against these; nothing is allocated.
+
+Modality frontends are STUBS per the brief: whisper gets precomputed
+(B, 1500, d_model) frame embeddings; qwen2-vl gets 3-D M-RoPE position ids
+(patch embeddings enter through the token stream in the backbone-only
+setting).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import SHAPES
+from repro.models import model as M
+from repro.models import steps as S
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg, seq, batch):
+    specs = {
+        "tokens": SDS((batch, seq), jnp.int32),
+        "labels": SDS((batch, seq), jnp.int32),
+    }
+    if cfg.is_encdec:
+        specs["enc_frames"] = SDS((batch, cfg.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16)
+    if cfg.mrope:
+        specs["positions3"] = SDS((batch, 3, seq), jnp.int32)
+    return specs
+
+
+def prefill_batch_specs(cfg, seq, batch):
+    specs = {"tokens": SDS((batch, seq), jnp.int32)}
+    if cfg.is_encdec:
+        specs["enc_frames"] = SDS((batch, cfg.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16)
+    if cfg.mrope:
+        specs["positions3"] = SDS((batch, 3, seq), jnp.int32)
+    return specs
+
+
+def decode_arg_specs(cfg, seq, batch):
+    """(tokens, cache, pos [, enc_out, positions3]) for decode_step."""
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, batch, seq))
+    # enc_out inside eval-shaped cache is None for non-encdec
+    args = {
+        "tokens": SDS((batch, 1), jnp.int32),
+        "cache": cache,
+        "pos": SDS((), jnp.int32),
+    }
+    if cfg.is_encdec:
+        args["enc_out"] = SDS((batch, cfg.encoder_seq, cfg.d_model),
+                              jnp.bfloat16)
+    if cfg.mrope:
+        args["positions3"] = SDS((batch, 3, 1), jnp.int32)
+    return args
+
+
+def state_specs(cfg, key=None):
+    """eval_shape of the full TrainState (params + optimizer)."""
+    k = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda kk: S.init_train_state(cfg, kk),
+                          jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+
+
+def param_specs_shapes(cfg):
+    return jax.eval_shape(lambda: M.init(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,116 @@
+"""Fault-tolerant LM training driver (DESIGN §7).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+        --steps 60 --ckpt-dir /tmp/ckpt --save-every 20
+
+Fault tolerance:
+  * auto-resume — on start the driver scans --ckpt-dir and restores the
+    newest complete checkpoint (atomic tmp+rename writes mean a crash can
+    never leave a half-written "latest").
+  * --simulate-failure-at N — raises mid-run after step N; re-running the
+    same command must continue from the last checkpoint and produce the
+    *bitwise-identical* trajectory (the loader is stateless in step, the
+    train step is deterministic) — tests/test_fault_tolerance.py asserts it.
+  * straggler mitigation is structural: equal-sized deterministic shards per
+    device + bulk-synchronous steps (see data/loader.py docstring).
+
+On this CPU container use --smoke (reduced same-family config). The full
+configs are exercised via the dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs import ARCHS
+from repro.data.loader import LoaderConfig, TokenLoader
+from repro.models import steps as S
+from repro.optim import schedule as sched
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50,
+          batch: int = 8, seq: int = 128, lr: float = 3e-3,
+          grad_accum: int = 1, ckpt_dir=None, save_every: int = 0,
+          simulate_failure_at: int = -1, seed: int = 0,
+          log_every: int = 10, keep: int = 3):
+    mod = ARCHS[arch]
+    cfg = mod.smoke_config() if smoke else mod.CONFIG
+
+    loader = TokenLoader(LoaderConfig(vocab_size=cfg.vocab_size,
+                                      global_batch=batch, seq_len=seq,
+                                      seed=seed))
+    lr_fn = sched.warmup_cosine(lr, warmup_steps=max(steps // 10, 1),
+                                total_steps=steps)
+
+    state = None
+    start_step = 0
+    if ckpt_dir is not None:
+        try:
+            template = jax.eval_shape(
+                lambda: S.init_train_state(cfg, jax.random.PRNGKey(seed)))
+            start_step, state = ckpt.restore(ckpt_dir, template)
+            print(f"[train] resumed from step {start_step}", flush=True)
+        except FileNotFoundError:
+            pass
+    if state is None:
+        state = S.init_train_state(cfg, jax.random.PRNGKey(seed))
+
+    raw_step = S.make_train_step(cfg, lr=lr_fn, grad_accum=grad_accum)
+    jit_step = jax.jit(raw_step)
+
+    losses = []
+    for step in range(start_step, steps):
+        t0 = time.time()
+        b = loader.batch_at(step)
+        if cfg.is_encdec:
+            b = dict(b)
+            b["enc_frames"] = jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(seed), step),
+                (batch, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)
+        state, metrics = jit_step(state, b)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step {step} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({time.time()-t0:.2f}s)", flush=True)
+        done = step + 1
+        if ckpt_dir is not None and save_every and (done % save_every == 0
+                                                    or done == steps):
+            ckpt.save(ckpt_dir, done, state, keep=keep)
+        if simulate_failure_at >= 0 and done >= simulate_failure_at:
+            raise SimulatedFailure(f"injected failure after step {done}")
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=0)
+    ap.add_argument("--simulate-failure-at", type=int, default=-1)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    train(a.arch, smoke=a.smoke, steps=a.steps, batch=a.batch, seq=a.seq,
+          lr=a.lr, grad_accum=a.grad_accum, ckpt_dir=a.ckpt_dir,
+          save_every=a.save_every, simulate_failure_at=a.simulate_failure_at,
+          seed=a.seed)
+
+
+if __name__ == "__main__":
+    main()

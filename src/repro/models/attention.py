@@ -1,0 +1,231 @@
+"""Attention blocks: GQA (with optional QKV bias / qk-norm / M-RoPE / cross
+attention) and MLA (multi-head latent attention, MiniCPM3/DeepSeek-V2 style).
+
+KV-cache layout (decode): k/v as (B, S_max, Hkv, Dh); one-token decode writes
+at ``pos`` with dynamic_update_slice.  MLA caches the *compressed* latent
+(B, S_max, kv_rank) plus the shared rope key (B, S_max, rope_dim) — the
+memory win that makes MLA interesting at 32k context.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.sharding import decode_attn_logits_constraint
+
+NEG_INF = -1e9
+
+
+def repeat_kv(x, n_rep):
+    """(B, S, Hkv, Dh) -> (B, S, Hkv * n_rep, Dh)"""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d))
+    return x.reshape(b, s, h * n_rep, d)
+
+
+def sdpa(q, k, v, causal, q_offset=0, kv_len=None, bias=None):
+    """q: (B, Sq, H, Dh), k/v: (B, Sk, H, Dh).  fp32 softmax.
+
+    ``q_offset``: absolute position of q[0] (decode: pos).  ``kv_len``:
+    number of valid kv entries (masks cache tail).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if sq == 1:   # decode: keep the kv-seq dim sharded (see sharding.py)
+        logits = decode_attn_logits_constraint(logits)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < kv_len[:, None]        # (B, Sk)
+        logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    if bias is not None:
+        logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg):
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": L.dense_init(ks[0], (d, h * dh)),
+        "wk": L.dense_init(ks[1], (d, hkv * dh)),
+        "wv": L.dense_init(ks[2], (d, hkv * dh)),
+        "wo": L.dense_init(ks[3], (h * dh, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh)
+        p["k_norm"] = L.rmsnorm_init(dh)
+    return p
+
+
+def _project_qkv(p, x, xc, cfg, dtype):
+    """xc = key/value source (cross-attention uses encoder output)."""
+    b, s, _ = x.shape
+    sk = xc.shape[1]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.matmul(x, p["wq"], dtype)
+    k = L.matmul(xc, p["wk"], dtype)
+    v = L.matmul(xc, p["wv"], dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, sk, hkv, dh)
+    v = v.reshape(b, sk, hkv, dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def gqa_apply(p, x, cfg, positions, dtype, *, causal=True, cache=None,
+              pos=None, xc=None, positions3=None, use_rope=True):
+    """Returns (out, new_cache).  cache = dict(k, v) of (B, S_max, Hkv, Dh).
+
+    Modes: full-sequence (cache=None), decode (cache + pos), cross-attn
+    (xc = encoder states, use_rope=False, causal=False).
+    """
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(p, x, x if xc is None else xc, cfg, dtype)
+    if use_rope:
+        if cfg.mrope and positions3 is not None:
+            q = L.apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+            k = L.apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    kv_len = None
+    q_offset = 0 if pos is None else pos
+    if cache is not None and xc is None:
+        if pos is not None and jnp.ndim(pos) > 0:
+            # Per-slot decode (continuous batching): each batch row writes at
+            # its own position; validity mask kv_len = pos + 1 replaces the
+            # causal mask (single query token per row).
+            pvec = jnp.reshape(pos, (b,))
+            smax = cache["k"].shape[1]
+            hit = (jnp.arange(smax)[None, :] == pvec[:, None])[:, :, None, None]
+            k = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+            v = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
+            kv_len = pvec + 1
+            causal = False
+            q_offset = 0
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": k, "v": v}
+        # scalar path: causal mask with q_offset=pos hides both the future
+        # inside this chunk and the unwritten cache tail (kpos > pos + s - 1)
+    k = repeat_kv(k.astype(dtype), h // hkv)
+    v = repeat_kv(v.astype(dtype), h // hkv)
+    out = sdpa(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    out = L.matmul(out.reshape(b, s, h * dh), p["wo"], dtype)
+    return out, new_cache
+
+
+def gqa_cache_init(cfg, batch, s_max, dtype=jnp.bfloat16):
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    z = jnp.zeros((batch, s_max, hkv, dh), dtype)
+    return {"k": z, "v": z}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) — MiniCPM3 / DeepSeek-V2 family
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": L.dense_init(ks[0], (d, qr)),
+        "q_norm": L.rmsnorm_init(qr),
+        "wuq": L.dense_init(ks[1], (qr, h * (dn + dr))),
+        "wdkv": L.dense_init(ks[2], (d, kvr)),
+        "kv_norm": L.rmsnorm_init(kvr),
+        "wukv": L.dense_init(ks[3], (kvr, h * (dn + dv))),
+        "wkr": L.dense_init(ks[4], (d, dr)),
+        "wo": L.dense_init(ks[5], (h * dv, d)),
+    }
+
+
+def mla_apply(p, x, cfg, positions, dtype, *, causal=True, cache=None, pos=None):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    # queries through the low-rank bottleneck
+    cq = L.rmsnorm(p["q_norm"], L.matmul(x, p["wdq"], dtype))
+    q = L.matmul(cq, p["wuq"], dtype).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    # compressed KV latent + shared rope key (this is what gets cached)
+    ckv = L.rmsnorm(p["kv_norm"], L.matmul(x, p["wdkv"], dtype))   # (B,S,kvr)
+    k_rope = L.apply_rope(L.matmul(x, p["wkr"], dtype)[:, :, None, :],
+                          positions, cfg.rope_theta)               # (B,S,1,dr)
+
+    new_cache = None
+    kv_len = None
+    q_offset = 0 if pos is None else pos
+    if cache is not None:
+        if pos is not None and jnp.ndim(pos) > 0:
+            pvec = jnp.reshape(pos, (b,))
+            smax = cache["ckv"].shape[1]
+            hit = jnp.arange(smax)[None, :] == pvec[:, None]
+            ckv = jnp.where(hit[:, :, None], ckv.astype(cache["ckv"].dtype),
+                            cache["ckv"])
+            k_rope = jnp.where(hit[:, :, None, None],
+                               k_rope.astype(cache["k_rope"].dtype),
+                               cache["k_rope"])
+            kv_len = pvec + 1
+            causal = False
+            q_offset = 0
+        else:
+            ckv = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+            k_rope = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                (0, pos, 0, 0))
+        new_cache = {"ckv": ckv, "k_rope": k_rope}
+    sk = ckv.shape[1]
+    kv = L.matmul(ckv.astype(dtype), p["wukv"], dtype).reshape(b, sk, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope.astype(dtype), (b, sk, h, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = sdpa(q_full, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    out = L.matmul(out.reshape(b, s, h * dv), p["wo"], dtype)
+    return out, new_cache
+
+
+def mla_cache_init(cfg, batch, s_max, dtype=jnp.bfloat16):
+    return {"ckv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, s_max, 1, cfg.qk_rope_dim), dtype)}

@@ -1,0 +1,155 @@
+"""Shared neural-net layers for the architecture substrate (pure JAX).
+
+Parameter convention: every layer is (init_fn(key, ...) -> pytree,
+apply_fn(params, x, ...) -> y) with explicit pytrees — no framework.
+Weights are stored in ``param_dtype`` (default fp32) and cast to
+``compute_dtype`` (default bf16) at use; matmuls accumulate in fp32 via
+``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(shape[0]) if scale is None else scale
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def matmul(x, w, compute_dtype):
+    return jax.lax.dot_general(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * params["scale"]).astype(dt)
+
+
+def layernorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dt)
+
+
+def norm_init(kind, d):
+    return layernorm_init(d) if kind == "layernorm" else rmsnorm_init(d)
+
+
+def norm_apply(kind, params, x):
+    return layernorm(params, x) if kind == "layernorm" else rmsnorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":           # squared ReLU (nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta=10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, S, H, Dh), positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta=10000.0):
+    """Multimodal RoPE (Qwen2-VL): rotary dims are split into 3 sections
+    (temporal, height, width), each rotated by its own position stream.
+
+    x: (B, S, H, Dh); positions3: (B, 3, S); sections: (t, h, w) halves
+    summing to Dh/2.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    # section id per rotary frequency, then gather that section's positions
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=dh // 2)
+    pos = positions3.astype(jnp.float32)[:, sec_id, :]  # (B, Dh/2, S)
+    ang = pos.transpose(0, 2, 1) * freqs[None, None, :]  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq, d):
+    """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / (d // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, gated=True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": dense_init(k1, (d_model, d_ff)),
+         "wo": dense_init(k2, (d_ff, d_model))}
+    if gated:
+        p["wg"] = dense_init(k3, (d_model, d_ff))
+    return p
+
+
+def mlp_apply(params, x, act, compute_dtype):
+    h = matmul(x, params["wi"], compute_dtype)
+    if "wg" in params:
+        g = matmul(x, params["wg"], compute_dtype)
+        h = activation(act, g) * h
+    else:
+        h = activation(act, h)
+    return matmul(h, params["wo"], compute_dtype)

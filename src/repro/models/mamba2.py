@@ -1,0 +1,219 @@
+"""Mamba-2 layer (Dao & Gu 2024, arXiv:2405.21060) — SSD (state-space
+duality) chunked algorithm for training/prefill, O(1)-state recurrence for
+decode.
+
+Layer: in_proj -> [z | x | B | C | dt] -> causal conv1d on (x,B,C) ->
+SSD(x * dt, A * dt, B, C) -> gated RMSNorm(y, z) -> out_proj.
+
+Shapes (per layer): d_inner = expand * d_model, heads = d_inner / head_dim,
+state = cfg.ssm_state.  Decode state: (B, heads, head_dim, state) +
+conv ring buffer (B, conv_width-1, conv_dim).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+CONV_W = 4
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.mamba_expand * cfg.d_model
+    heads = d_inner // cfg.mamba_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state   # x, B, C share the conv
+    return d_inner, heads, conv_dim
+
+
+def mamba_init(key, cfg):
+    """Input projections are SEPARATE weights per stream (z, x, BC, dt), not
+    one fused in_proj: slicing a fused tensor-sharded output at boundaries
+    that don't align with the 16-way shard made SPMD reshard every slice
+    (measured: 180+ collective-permutes per layer).  Separate weights give
+    each stream its own clean (fsdp, tensor) sharding; the depthwise conv
+    splits per-stream identically (it is per-feature, so splitting is
+    mathematically the same)."""
+    d = cfg.d_model
+    d_inner, heads, conv_dim = mamba_dims(cfg)
+    n2 = 2 * cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": L.dense_init(ks[0], (d, d_inner)),
+        "wx": L.dense_init(ks[1], (d, d_inner)),
+        "wbc": L.dense_init(ks[2], (d, n2)),
+        "wdt": L.dense_init(ks[3], (d, heads)),
+        "conv_w_x": L.dense_init(ks[4], (CONV_W, d_inner), scale=0.5),
+        "conv_b_x": jnp.zeros((d_inner,), jnp.float32),
+        "conv_w_bc": L.dense_init(ks[5], (CONV_W, n2), scale=0.5),
+        "conv_b_bc": jnp.zeros((n2,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm": L.rmsnorm_init(d_inner),
+        "out_proj": L.dense_init(ks[6], (d_inner, d)),
+    }
+
+
+def _causal_conv(x, w, bias, dtype):
+    """Depthwise causal conv over (B, S, C)."""
+    c = x.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    kernel = w.astype(dtype)[:, None, :]                 # (W, 1, C) depthwise
+    out = jax.lax.conv_general_dilated(
+        xp.astype(dtype), kernel, window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c) + bias.astype(dtype)
+    return out
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    T = x.shape[-1]
+    x = jnp.broadcast_to(x[..., None], x.shape + (T,))   # X[..., i, j] = x_i
+    mask = jnp.tril(jnp.ones((T, T), bool), k=-1)        # keep i > j
+    x = jnp.where(mask, x, 0)
+    x_segsum = jnp.cumsum(x, axis=-2)                    # sum over j < a <= i
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, x_segsum, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk, unroll=False, edt=jnp.bfloat16):
+    """SSD algorithm (minimal-mamba2 style), chunked over sequence.
+
+    x: (b, s, h, p), dt: (b, s, h), A: (h,) negative, Bm/Cm: (b, s, n).
+    Returns y: (b, s, h, p).
+
+    Memory discipline: decays (cumsum/exp chains) and the inter-chunk
+    recurrent state stay f32; the big einsum OPERANDS — notably the
+    (b, h, c, l, l) intra-chunk decay matrix and the (b, c, l, h, p)
+    sequence tensors — are cast to ``edt`` (bf16) with f32 accumulation via
+    preferred_element_type.  Halving those tensors halved the measured
+    HBM-bytes term of the mamba2 train cell; the recurrence itself is
+    unaffected (f32).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0
+    c = s // chunk
+    # rescale by dt (the "discretization"); dt is f32, result cast to edt
+    xdt = (x.astype(jnp.float32) * dt[..., None]).astype(edt)  # (b, s, h, p)
+    Adt = A[None, None, :] * dt                   # (b, s, h) f32
+
+    xc = xdt.reshape(b, c, chunk, h, p)
+    Ac = Adt.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)   # (b, h, c, l)
+    Bc = Bm.astype(edt).reshape(b, c, chunk, n)
+    Cc = Cm.astype(edt).reshape(b, c, chunk, n)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)                          # (b, h, c, l) f32
+    # 1. intra-chunk (diagonal block) output.  Decomposed by hand so the
+    # (b, h, c, l, l) "attention matrix" of the state-space duality is built
+    # and consumed in edt (bf16) — the single biggest temp of the layer —
+    # while both contractions still accumulate f32.
+    Lmat = jnp.exp(_segsum(Ac)).astype(edt)                  # (b, h, c, l, l)
+    CB = jnp.einsum("bcln,bcsn->bcls", Cc, Bc,
+                    preferred_element_type=jnp.float32).astype(edt)
+    M = Lmat * CB[:, None]                                   # (b, h, c, l, s)
+    Y_diag = jnp.einsum("bhcls,bcshp->bclhp", M, xc,
+                        preferred_element_type=jnp.float32)
+    # 2. chunk-final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum).astype(edt)  # (b, h, c, l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Bc, decay_states, xc,
+                        preferred_element_type=jnp.float32)
+    # 3. inter-chunk recurrence on chunk states (scan over chunks, f32)
+    chunk_decay = jnp.exp(A_cum[..., -1])                    # (b, h, c)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                        # (b,h,p,n), (b,h)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev.astype(edt)
+
+    states_t = states.transpose(1, 0, 2, 3, 4)               # (c, b, h, p, n)
+    decay_t = chunk_decay.transpose(2, 0, 1)                 # (c, b, h)
+    init = jnp.zeros_like(states_t[0])
+    final_state, prev_states = jax.lax.scan(scan_fn, init, (states_t, decay_t),
+                                            unroll=(c if unroll else 1))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b, c, h, p, n)
+    # 4. state -> output contribution
+    state_decay = jnp.exp(A_cum).astype(edt)                 # (b, h, c, l)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       Cc, prev_states, state_decay,
+                       preferred_element_type=jnp.float32)
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def mamba_apply(p, hidden, cfg, dtype, chunk=128):
+    """Full-sequence (train/prefill) forward.  Returns (out, final_ssm_state)."""
+    b, s, _ = hidden.shape
+    chunk = min(chunk, s)
+    d_inner, heads, conv_dim = mamba_dims(cfg)
+    z = L.matmul(hidden, p["wz"], dtype)                     # (b, s, d_inner)
+    x_pre = L.matmul(hidden, p["wx"], dtype)                 # (b, s, d_inner)
+    bc_pre = L.matmul(hidden, p["wbc"], dtype)               # (b, s, 2n)
+    dt = L.matmul(hidden, p["wdt"], dtype)                   # (b, s, heads)
+    conv_tail = (x_pre[:, -(CONV_W - 1):], bc_pre[:, -(CONV_W - 1):])
+    x = jax.nn.silu(_causal_conv(x_pre, p["conv_w_x"], p["conv_b_x"], dtype))
+    bc = jax.nn.silu(_causal_conv(bc_pre, p["conv_w_bc"], p["conv_b_bc"], dtype))
+    Bm, Cm = jnp.split(bc, [cfg.ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b, s, h)
+    A = -jnp.exp(p["A_log"])                                 # (h,) negative
+    xh = x.reshape(b, s, heads, cfg.mamba_head_dim)
+    y, final_state = ssd_chunked(xh.astype(dtype), dt, A,
+                                 Bm.astype(dtype), Cm.astype(dtype),
+                                 chunk, unroll=cfg.unroll_scan, edt=dtype)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))             # gated norm
+    return L.matmul(y, p["out_proj"], dtype), (final_state, conv_tail)
+
+
+def mamba_state_init(cfg, batch, dtype=jnp.float32):
+    d_inner, heads, conv_dim = mamba_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, heads, cfg.mamba_head_dim, cfg.ssm_state), dtype),
+        "conv_x": jnp.zeros((batch, CONV_W - 1, d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, CONV_W - 1, 2 * cfg.ssm_state), dtype),
+    }
+
+
+def _conv_step(window_prev, new, w, bias, dtype):
+    """Ring-buffer depthwise conv step.  window_prev: (b, W-1, C), new: (b, C)."""
+    window = jnp.concatenate([window_prev, new[:, None]], axis=1)   # (b, W, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(dtype), w.astype(dtype)) \
+        + bias.astype(dtype)
+    return out, window[:, 1:]
+
+
+def mamba_decode_step(p, hidden, state, cfg, dtype):
+    """One-token recurrent step.  hidden: (b, 1, d)."""
+    b = hidden.shape[0]
+    d_inner, heads, conv_dim = mamba_dims(cfg)
+    h0 = hidden[:, 0]
+    z = L.matmul(h0, p["wz"], dtype)
+    x_pre = L.matmul(h0, p["wx"], dtype)
+    bc_pre = L.matmul(h0, p["wbc"], dtype)
+    dt = L.matmul(h0, p["wdt"], dtype)
+    x, new_conv_x = _conv_step(state["conv_x"], x_pre,
+                               p["conv_w_x"], p["conv_b_x"], dtype)
+    bc, new_conv_bc = _conv_step(state["conv_bc"], bc_pre,
+                                 p["conv_w_bc"], p["conv_b_bc"], dtype)
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(bc)
+    Bm, Cm = jnp.split(bc, [cfg.ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b, h)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, heads, cfg.mamba_head_dim).astype(jnp.float32)
+    decay = jnp.exp(A[None] * dt)                            # (b, h)
+    # h <- decay * h + dt * x B^T ;  y = C h + D x
+    dBx = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    ssm = state["ssm"] * decay[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, d_inner).astype(dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = L.matmul(y, p["out_proj"], dtype)[:, None]         # (b, 1, d)
+    return out, {"ssm": ssm, "conv_x": new_conv_x, "conv_bc": new_conv_bc}

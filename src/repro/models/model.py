@@ -1,0 +1,364 @@
+"""Composable model definition covering all 10 assigned architectures.
+
+A model is a ``ModelConfig`` + pure functions:
+
+    init(cfg, key)                          -> params pytree
+    forward(cfg, params, batch)             -> logits           (train/prefill)
+    decode_step(cfg, params, tok, cache, pos) -> logits, cache  (serving)
+
+Layer heterogeneity (Jamba's 1:7 mamba:attn interleave, per-layer MoE) is a
+*pattern*: ``num_layers = len(pattern) * num_groups``; parameters are stacked
+over groups and the group body (pattern unrolled) is scanned — HLO stays one
+group deep regardless of depth, and remat wraps the group body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import mamba2 as m2
+from repro.models.sharding import shard_btd, shard_btv
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"        # attn | mamba
+    ffn: str = "mlp"           # mlp | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # block flavor
+    pattern: tuple = (LayerSpec(),)
+    activation: str = "silu"
+    gated: bool = True
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    norm: str = "rmsnorm"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # attention kind
+    attn_kind: str = "gqa"     # gqa | mla
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    num_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    # Mamba
+    mamba_expand: int = 2
+    mamba_head_dim: int = 64
+    ssm_state: int = 128
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 1500
+    frontend: str = "none"     # none | audio_stub | vision_stub
+    # multimodal rope (qwen2-vl)
+    mrope: bool = False
+    mrope_sections: tuple = (16, 24, 24)
+    # numerics / training
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    optimizer: str = "adamw"   # adamw | adafactor
+    remat: bool = True
+    unroll_scan: bool = False  # measurement mode: unroll layer/chunk scans so
+                               # HLO cost analysis sees true multiplicities
+    # serving
+    cache_dtype: Any = jnp.bfloat16
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % len(self.pattern) == 0, (
+            self.name, self.num_layers, len(self.pattern))
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def padded_vocab(self) -> int:
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def param_count(self) -> int:
+        """Exact parameter count from shapes (used for 6ND roofline)."""
+        shapes = jax.eval_shape(lambda k: init(self, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(jnp.prod(jnp.array(x.shape))) for x in jax.tree.leaves(shapes))
+
+
+def uniform_pattern(mixer="attn", ffn="mlp"):
+    return (LayerSpec(mixer=mixer, ffn=ffn),)
+
+
+def jamba_pattern():
+    """Jamba: attention at layer i%8==4 (1:7), MoE every 2nd layer."""
+    return tuple(
+        LayerSpec(mixer="attn" if i % 8 == 4 else "mamba",
+                  ffn="moe" if i % 2 == 1 else "mlp")
+        for i in range(8))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, spec: LayerSpec, key):
+    ks = jax.random.split(key, 4)
+    p = {"pre_norm": L.norm_init(cfg.norm, cfg.d_model)}
+    if spec.mixer == "attn":
+        p["attn"] = (attn.mla_init(ks[0], cfg) if cfg.attn_kind == "mla"
+                     else attn.gqa_init(ks[0], cfg))
+    else:
+        p["mamba"] = m2.mamba_init(ks[0], cfg)
+    if spec.ffn != "none":
+        p["post_norm"] = L.norm_init(cfg.norm, cfg.d_model)
+        if spec.ffn == "moe":
+            p["moe"] = moe_lib.moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated)
+    if cfg.is_encdec and spec.mixer == "attn":
+        p["cross_norm"] = L.norm_init(cfg.norm, cfg.d_model)
+        p["cross"] = attn.gqa_init(ks[2], cfg)
+    return p
+
+
+def _enc_layer_init(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    return {
+        "pre_norm": L.norm_init(cfg.norm, cfg.d_model),
+        "attn": attn.gqa_init(ks[0], cfg),
+        "post_norm": L.norm_init(cfg.norm, cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Pytree:
+    kemb, khead, kblocks, kenc = jax.random.split(key, 4)
+    V = cfg.padded_vocab
+    params: dict = {
+        "embed": L.dense_init(kemb, (V, cfg.d_model), scale=0.02),
+        "final_norm": L.norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(khead, (cfg.d_model, V))
+    # decoder blocks: per pattern position, params stacked over groups
+    g = cfg.num_groups
+    blocks = {}
+    for i, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(kblocks, i), g)
+        blocks[f"l{i}"] = jax.vmap(lambda k: _layer_init(cfg, spec, k))(keys)
+    params["blocks"] = blocks
+    if cfg.is_encdec:
+        keys = jax.random.split(kenc, cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _enc_layer_init(cfg, k))(keys),
+            "norm": L.norm_init(cfg.norm, cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg, spec: LayerSpec, p, h, positions, dtype, *,
+                 causal=True, cache=None, pos=None, enc_out=None,
+                 positions3=None, decode=False):
+    """One decoder layer.  Returns (h, new_cache)."""
+    new_cache = {}
+    # under sequence parallelism the constraint pins the pre-mixer all-gather
+    # to the bf16 NORMED tensor (unconstrained, SPMD gathered the f32
+    # pre-norm input and re-ran the norm on the full sequence per shard)
+    x = shard_btd(L.norm_apply(cfg.norm, p["pre_norm"], h))
+    if spec.mixer == "attn":
+        apply_fn = attn.mla_apply if cfg.attn_kind == "mla" else attn.gqa_apply
+        kw = dict(causal=causal, cache=None if cache is None else cache.get("kv"),
+                  pos=pos)
+        if cfg.attn_kind != "mla":
+            kw["positions3"] = positions3
+        out, kv = apply_fn(p["attn"], x, cfg, positions, dtype, **kw)
+        if kv is not None:
+            new_cache["kv"] = kv
+        h = h + out
+        if cfg.is_encdec:
+            xc = L.norm_apply(cfg.norm, p["cross_norm"], h)
+            out, _ = attn.gqa_apply(p["cross"], xc, cfg, positions, dtype,
+                                    causal=False, xc=enc_out, use_rope=False)
+            h = h + out
+    else:
+        if decode:
+            out, st = m2.mamba_decode_step(p["mamba"], x, cache["ssm"], cfg, dtype)
+            new_cache["ssm"] = st
+        else:
+            out, (final_state, conv_tail) = m2.mamba_apply(p["mamba"], x, cfg, dtype)
+            if cache is not None:        # prefill: capture recurrent state
+                st = m2.mamba_state_init(cfg, h.shape[0])
+                conv_x, conv_bc = conv_tail
+                new_cache["ssm"] = {
+                    "ssm": final_state.astype(st["ssm"].dtype),
+                    "conv_x": conv_x.astype(st["conv_x"].dtype),
+                    "conv_bc": conv_bc.astype(st["conv_bc"].dtype),
+                }
+        h = h + out
+    if spec.ffn != "none":
+        x = shard_btd(L.norm_apply(cfg.norm, p["post_norm"], h))
+        if spec.ffn == "moe":
+            h = h + moe_lib.moe_apply(p["moe"], x, cfg, dtype)
+        else:
+            h = h + L.mlp_apply(p["mlp"], x, cfg.activation, dtype)
+    return h, new_cache
+
+
+def _encode(cfg, params, enc_frames):
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    dtype = cfg.compute_dtype
+    h = enc_frames.astype(dtype)
+    h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model).astype(dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+
+    def body(h, p):
+        x = L.norm_apply(cfg.norm, p["pre_norm"], h)
+        out, _ = attn.gqa_apply(p["attn"], x, cfg, positions, dtype,
+                                causal=False, use_rope=False)
+        h = h + out
+        x = L.norm_apply(cfg.norm, p["post_norm"], h)
+        h = h + L.mlp_apply(p["mlp"], x, cfg.activation, dtype)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"]["blocks"],
+                        unroll=cfg.encoder_layers if cfg.unroll_scan else 1)
+    return L.norm_apply(cfg.norm, params["encoder"]["norm"], h)
+
+
+def forward(cfg: ModelConfig, params, batch, *, make_cache_len: int = 0,
+            return_hidden: bool = False):
+    """Full-sequence forward.  batch keys: tokens (B,S) [, enc_frames,
+    positions3].  If make_cache_len > 0, also build+return the KV/SSM cache
+    sized to that length (prefill).  Returns (logits, cache|None); with
+    return_hidden=True returns (logits, hidden) where hidden is the
+    final-norm output (B, S, D) — the frozen-feature hook for L1 probes.
+    """
+    dtype = cfg.compute_dtype
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = shard_btd(jnp.take(params["embed"], tokens, axis=0).astype(dtype))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    positions3 = batch.get("positions3")
+    enc_out = _encode(cfg, params, batch["enc_frames"]) if cfg.is_encdec else None
+
+    prefill = make_cache_len > 0
+    cache_out = {} if prefill else None
+
+    def group_body(h, group_params):
+        group_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            p = group_params[f"l{i}"]
+            if prefill:
+                cache_in = None
+                if spec.mixer == "attn":
+                    init_kv = (attn.mla_cache_init if cfg.attn_kind == "mla"
+                               else attn.gqa_cache_init)(cfg, b, make_cache_len,
+                                                         cfg.cache_dtype)
+                    cache_in = {"kv": init_kv}
+                else:
+                    cache_in = {"ssm": None}   # signals state capture
+                h, c = _apply_layer(cfg, spec, p, h, positions, dtype,
+                                    cache=cache_in, pos=0,
+                                    enc_out=enc_out, positions3=positions3)
+                group_cache[f"l{i}"] = c
+            else:
+                h, _ = _apply_layer(cfg, spec, p, h, positions, dtype,
+                                    enc_out=enc_out, positions3=positions3)
+            h = shard_btd(h)
+        return h, group_cache if prefill else None
+
+    body = jax.checkpoint(group_body) if (cfg.remat and not prefill) else group_body
+    h, caches = jax.lax.scan(body, h, params["blocks"],
+                             unroll=cfg.num_groups if cfg.unroll_scan else 1)
+    h = L.norm_apply(cfg.norm, params["final_norm"], h)
+    head = params.get("head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = shard_btv(L.matmul(h, head.astype(dtype), dtype))
+    if return_hidden:
+        return logits, h
+    if prefill:
+        return logits, {"blocks": caches, "enc_out": enc_out}
+    return logits, None
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    """Empty cache pytree for decode-from-scratch dry-runs."""
+    g = cfg.num_groups
+
+    def one(spec):
+        if spec.mixer == "attn":
+            kv = (attn.mla_cache_init if cfg.attn_kind == "mla"
+                  else attn.gqa_cache_init)(cfg, batch, s_max, cfg.cache_dtype)
+            return {"kv": kv}
+        return {"ssm": m2.mamba_state_init(cfg, batch)}
+
+    blocks = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = one(spec)
+        blocks[f"l{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (g,) + x.shape), c)
+    return {"blocks": blocks, "enc_out": None}
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos, *,
+                enc_out=None, positions3=None):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 position.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    dtype = cfg.compute_dtype
+    b = tokens.shape[0]
+    h = shard_btd(jnp.take(params["embed"], tokens, axis=0).astype(dtype))
+    positions = jnp.broadcast_to(pos[None, None] if jnp.ndim(pos) == 0 else pos,
+                                 (b, 1))
+    if enc_out is None and cache.get("enc_out") is not None:
+        enc_out = cache["enc_out"]
+
+    def group_body(h, scanned):
+        group_params, group_cache = scanned
+        new_group_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            h, c = _apply_layer(cfg, spec, group_params[f"l{i}"], h, positions,
+                                dtype, cache=group_cache[f"l{i}"], pos=pos,
+                                enc_out=enc_out, positions3=positions3,
+                                decode=(spec.mixer == "mamba"))
+            new_group_cache[f"l{i}"] = c
+        return h, new_group_cache
+
+    h, new_blocks = jax.lax.scan(group_body, h, (params["blocks"], cache["blocks"]),
+                                 unroll=cfg.num_groups if cfg.unroll_scan else 1)
+    h = L.norm_apply(cfg.norm, params["final_norm"], h)
+    head = params.get("head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = shard_btv(L.matmul(h, head.astype(dtype), dtype))
+    return logits, {"blocks": new_blocks, "enc_out": enc_out}

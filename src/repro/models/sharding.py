@@ -1,0 +1,306 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs for the
+production mesh (DESIGN §5).
+
+Logical axes:
+    fsdp    parameter + optimizer-state sharding (ZeRO-3 style all-gather
+            per layer inside the scan)          -> ('data',) or ('pod','data')
+    tensor  TP: heads / d_ff / experts          -> ('model',)
+    batch   DP for activations                  -> ('pod','data')
+
+``ShardingPolicy`` is the hillclimb surface: the dry-run lowers under a
+policy and the perf loop mutates it (sequence sharding, cache layout,
+fsdp on/off) and re-lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True            # shard params over the data axis too
+    seq_shard: bool = False      # sequence parallelism for activations
+    cache_heads_on_tensor: bool = False   # else head_dim on tensor
+    cache_seq_on_fsdp: bool = False       # long-context: shard cache S on data
+    cache_seq_on_tensor: bool = False     # decode: shard cache S on model —
+    # a dh-sharded cache is re-GATHERED whole every decode step (measured
+    # ~2 GB/layer/token); S-sharded, XLA partitions the softmax+contraction
+    # with only small per-layer all-reduces
+    batch_on_pod: bool = True    # include 'pod' in the batch axes
+
+
+def axes(mesh: Mesh, policy: ShardingPolicy):
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    fsdp = (("pod", "data") if has_pod else ("data",)) if policy.fsdp else None
+    batch = ("pod", "data") if (has_pod and policy.batch_on_pod) else ("data",)
+    return dict(fsdp=fsdp, tensor="model", batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules, matched on the pytree path (joined with '/').
+# Leading 'g' axis (stacked layer groups) is never sharded.
+# ---------------------------------------------------------------------------
+
+def _flat(*axes):
+    """Flatten possibly-tuple logical axes into one PartitionSpec entry."""
+    out = []
+    for a in axes:
+        if a is None:
+            continue
+        out.extend(a if isinstance(a, tuple) else (a,))
+    return tuple(out) if out else None
+
+
+_RULES = [
+    # (regex on path, spec builder taking (fsdp, tensor) -> tuple of axes
+    #  WITHOUT the leading group axis; embed/head have no group axis)
+    # embed: vocab replicated, d_model over fsdp+tensor — the token gather
+    # partitions trivially (indices pass through, operand offset-dim sharded);
+    # sharding vocab instead makes SPMD fully rematerialize the gather.
+    (r"embed$",                 lambda f, t: (None, _flat(f, t))),   # (V, D)
+    (r"head$",                  lambda f, t: (f, t)),          # (D, V)
+    (r"(final_norm|norm)/(scale|bias)$", lambda f, t: None),   # replicated
+    (r"(pre_norm|post_norm|cross_norm|q_norm|k_norm|kv_norm)/(scale|bias)$",
+     lambda f, t: None),
+    # attention (GQA + cross)
+    (r"w[qkv]$",                lambda f, t: (f, t)),          # (D, H*dh)
+    (r"wo$",                    lambda f, t: (t, f)),          # (H*dh, D)
+    (r"b[qkv]$",                lambda f, t: (t,)),
+    # MLA
+    (r"wdq$",                   lambda f, t: (f, None)),
+    (r"wuq$",                   lambda f, t: (None, t)),
+    (r"wdkv$",                  lambda f, t: (f, None)),
+    (r"wukv$",                  lambda f, t: (None, t)),
+    (r"wkr$",                   lambda f, t: (f, None)),
+    # MLP
+    (r"(wi|wg)$",               lambda f, t: (f, t)),          # (D, F)
+    # MoE (E, D, F) / (E, F, D): experts on tensor (EP), fsdp inside expert
+    (r"moe/router$",            lambda f, t: (f, None)),
+    (r"moe/(wi|wg)$",           lambda f, t: (t, f, None)),
+    (r"moe/wo$",                lambda f, t: (t, None, f)),
+    # Mamba (split input projections — see mamba2.mamba_init)
+    (r"(wz|wx|wbc|wdt)$",       lambda f, t: (f, t)),
+    (r"out_proj$",              lambda f, t: (t, f)),
+    (r"conv_w_(x|bc)$",         lambda f, t: (None, t)),
+    (r"conv_b_(x|bc)$",         lambda f, t: (t,)),
+    (r"(A_log|D|dt_bias)$",     lambda f, t: None),
+]
+
+# params whose shapes may not divide the mesh axis — fall back to replicated
+# if a dim isn't divisible.
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _divisible(dim_size, axis_spec, mesh: Mesh) -> bool:
+    if axis_spec is None:
+        return True
+    names = axis_spec if isinstance(axis_spec, tuple) else (axis_spec,)
+    k = 1
+    for nm in names:
+        k *= mesh.shape[nm]
+    return dim_size % k == 0
+
+
+def param_specs(params, mesh: Mesh, policy: ShardingPolicy):
+    """PartitionSpec pytree matching `params` (or its eval_shape)."""
+    ax = axes(mesh, policy)
+    f, t = ax["fsdp"], ax["tensor"]
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        in_blocks = "blocks" in ps
+        for pat, builder in _RULES:
+            if re.search(pat, ps):
+                spec = builder(f, t)
+                if spec is None:
+                    spec = ()
+                # prepend unsharded group axis for stacked block params
+                if in_blocks:
+                    spec = (None,) + tuple(spec)
+                spec = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+                # drop axes that don't divide
+                spec = tuple(s if _divisible(leaf.shape[i], s, mesh) else None
+                             for i, s in enumerate(spec))
+                return P(*spec)
+        return P()   # default: replicated
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def train_state_specs(state_shapes, pspecs, mesh: Mesh):
+    """Sharding specs for a TrainState: params use `pspecs`; optimizer state
+    mirrors them (AdamW) or drops the factored axis (Adafactor vr/vc)."""
+    from repro.optim.adamw import AdamWState
+    from repro.optim.adafactor import AdafactorState
+    opt = state_shapes.opt
+    if isinstance(opt, AdamWState):
+        opt_spec = AdamWState(mu=pspecs, nu=pspecs, count=P())
+    else:
+        params_shapes = state_shapes.params
+        vr = jax.tree.map(lambda sp, ls: P(*tuple(sp)[:-1]) if ls.ndim >= 2 else P(),
+                          pspecs, params_shapes)
+        vc = jax.tree.map(lambda sp, ls: P(*(tuple(sp)[:-2] + tuple(sp)[-1:]))
+                          if ls.ndim >= 2 else P(), pspecs, params_shapes)
+        v = jax.tree.map(lambda sp, ls: P() if ls.ndim >= 2 else sp,
+                         pspecs, params_shapes)
+        opt_spec = AdafactorState(vr=vr, vc=vc, v=v, count=P())
+    import repro.models.steps as S
+    return S.TrainState(params=pspecs, opt=opt_spec, step=P())
+
+
+def batch_specs(batch_shapes, mesh: Mesh, policy: ShardingPolicy,
+                shard_batch_dim: bool = True):
+    ax = axes(mesh, policy)
+    b = ax["batch"]
+
+    def one(path, leaf):
+        if not shard_batch_dim or leaf.shape[0] % _prod(mesh, b) != 0:
+            return P()
+        return P(b, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, policy: ShardingPolicy):
+    """KV/SSM cache specs.  Default: batch on ('pod','data'); the head_dim
+    (last axis) on 'model' (uniform across archs since kv_heads may not
+    divide).  long-context (cache_seq_on_fsdp): sequence axis on data."""
+    ax = axes(mesh, policy)
+    b = ax["batch"]
+    t = ax["tensor"]
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        nb = _prod(mesh, b)
+        # caches inside scanned blocks carry a leading (unsharded) group axis;
+        # all rules below index LOGICAL dims (group axis stripped).
+        grouped = ps.startswith("blocks/")
+        off = 1 if grouped else 0
+        shape = leaf.shape[off:]
+        nd = len(shape)
+        spec = [None] * nd
+        if nd and shape[0] % nb == 0:
+            spec[0] = b                       # batch
+        if "kv/k" in ps or "kv/v" in ps or "k_rope" in ps:
+            # (B, S, Hkv, Dh) / (B, S, 1, dr)
+            if policy.cache_seq_on_tensor and _divisible(shape[1], t, mesh):
+                spec[1] = t
+            elif policy.cache_seq_on_fsdp and _divisible(shape[1], ("data",), mesh):
+                spec[1] = "data"
+            elif policy.cache_heads_on_tensor and _divisible(shape[2], t, mesh):
+                spec[2] = t
+            elif _divisible(shape[-1], t, mesh):
+                spec[-1] = t
+        elif "ckv" in ps:        # (B, S, kv_rank)
+            if policy.cache_seq_on_tensor and _divisible(shape[1], t, mesh):
+                spec[1] = t
+            elif _divisible(shape[-1], t, mesh):
+                spec[-1] = t
+        elif "ssm/ssm" in ps:    # (B, heads, p, n)
+            if _divisible(shape[1], t, mesh):
+                spec[1] = t
+        elif "ssm/conv" in ps:   # (B, W-1, conv_dim)
+            if _divisible(shape[-1], t, mesh):
+                spec[-1] = t
+        return P(*([None] * off + spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def _prod(mesh: Mesh, axis_names) -> int:
+    if axis_names is None:
+        return 1
+    names = axis_names if isinstance(axis_names, tuple) else (axis_names,)
+    k = 1
+    for nm in names:
+        k *= mesh.shape[nm]
+    return k
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints.
+#
+# jit's sharding propagation only sees constraints on inputs/outputs; left
+# free, it picked pathological layouts for the backward scan body (measured:
+# batch fully replicated + d_model sharded 256-way, i.e. a 40 GB logits
+# all-gather and 12 per-layer 671 MB activation gathers per step).  The fix
+# is standard MaxText practice: pin (batch, seq, d_model) activations to
+# (data, None, None) at the residual stream and the logits to
+# (data, None, model).  The module-level ACT holds the axes; when unset
+# (single-device tests/training) every helper is a no-op.
+# ---------------------------------------------------------------------------
+
+import contextlib
+
+_ACT: dict | None = None
+
+
+@contextlib.contextmanager
+def activation_axes(mesh: Mesh, policy: "ShardingPolicy"):
+    """Enable activation constraints for code lowered within this context."""
+    global _ACT
+    ax = axes(mesh, policy)
+    prev = _ACT
+    # Megatron-style sequence parallelism: between layers the residual
+    # stream is sharded over the TENSOR axis on seq, so the TP boundary
+    # reduce becomes reduce-scatter + all-gather instead of all-reduce
+    _ACT = {"batch": ax["batch"], "tensor": ax["tensor"],
+            "seq": ax["tensor"] if policy.seq_shard else None,
+            "kv_seq_sharded": policy.cache_seq_on_tensor}
+    try:
+        yield
+    finally:
+        _ACT = prev
+
+
+def shard_btd(x):
+    """(B, S, D) residual-stream activations -> P(batch, seq?, None)."""
+    if _ACT is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(_ACT["batch"], _ACT["seq"], None))
+
+
+def shard_btv(x):
+    """(B, S, V) logits -> P(batch, None, tensor)."""
+    if _ACT is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(_ACT["batch"], None, _ACT["tensor"]))
+
+
+def shard_as(x, *dims):
+    """Generic activation constraint.  Each dim is 'batch' | 'tensor' | None.
+    No-op outside an activation_axes context."""
+    if _ACT is None:
+        return x
+    spec = tuple(_ACT[d] if isinstance(d, str) else None for d in dims)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def decode_attn_logits_constraint(logits):
+    """Decode attention logits (B, H, 1, S_kv) with an S-sharded KV cache:
+    pin the kv-seq dim to the tensor axis so XLA partitions softmax +
+    the AV contraction (small all-reduces) instead of all-gathering the
+    whole cache every step (measured 2 x 1 GB f32 per layer per token)."""
+    if _ACT is None or not _ACT.get("kv_seq_sharded"):
+        return logits
+    return jax.lax.with_sharding_constraint(
+        logits, P(_ACT["batch"], None, None, _ACT["tensor"]))

@@ -1,0 +1,62 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moment, no momentum.
+
+Used for the >=50B assigned architectures so optimizer state is O(d+f) per
+matrix instead of O(d*f): at 340B params AdamW state alone (8 bytes/param)
+would blow the 16 GB/chip HBM budget even fully sharded (DESIGN §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import clip_by_global_norm
+
+
+class AdafactorState(NamedTuple):
+    vr: dict      # row statistics  (shape[:-1])   for ndim >= 2 leaves
+    vc: dict      # col statistics  (shape[:-2] + shape[-1:])
+    v: dict       # full statistics for ndim < 2 leaves
+    count: jax.Array
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def init(params) -> AdafactorState:
+    vr = jax.tree.map(lambda p: jnp.zeros(p.shape[:-1], jnp.float32)
+                      if _factored(p) else jnp.zeros((1,), jnp.float32), params)
+    vc = jax.tree.map(lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                      if _factored(p) else jnp.zeros((1,), jnp.float32), params)
+    v = jax.tree.map(lambda p: jnp.zeros((1,), jnp.float32)
+                     if _factored(p) else jnp.zeros(p.shape, jnp.float32), params)
+    return AdafactorState(vr=vr, vc=vc, v=v, count=jnp.zeros((), jnp.int32))
+
+
+def update(grads, state: AdafactorState, params, lr, *, decay=0.99,
+           eps=1e-30, clip_threshold=1.0, max_grad_norm=1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    count = state.count + 1
+
+    def upd(g, vr, vc, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g / jnp.sqrt(r[..., None]) / jnp.sqrt(vc[..., None, :])
+        else:
+            v = decay * v + (1 - decay) * g2
+            u = g / jnp.sqrt(v)
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc, v
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, state.v, params)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdafactorState(pick(1), pick(2), pick(3), count), gnorm

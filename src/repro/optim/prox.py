@@ -1,0 +1,36 @@
+"""Proximal-L1 operators — the paper's objective as a first-class training
+feature (DESIGN §6.2): sparse fine-tuning / sparse readout heads via the
+shrink operator and the pathwise lambda schedule of Sec. 4.1.1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_threshold(x, t):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def prox_l1(params, lr, lam, mask_tree=None):
+    """Apply the L1 prox to (a masked subset of) a parameter tree after a
+    gradient step: the proximal-gradient view of the paper's objective."""
+    def one(p, m=None):
+        s = soft_threshold(p.astype(jnp.float32), lr * lam)
+        if m is not None:
+            s = jnp.where(m, s, p.astype(jnp.float32))
+        return s.astype(p.dtype)
+    if mask_tree is None:
+        return jax.tree.map(one, params)
+    return jax.tree.map(one, params, mask_tree)
+
+
+def l1_penalty(params):
+    return sum(jnp.sum(jnp.abs(p.astype(jnp.float32)))
+               for p in jax.tree.leaves(params))
+
+
+def sparsity(params):
+    nz = sum(jnp.sum(p != 0) for p in jax.tree.leaves(params))
+    total = sum(p.size for p in jax.tree.leaves(params))
+    return nz / total

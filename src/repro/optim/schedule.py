@@ -1,0 +1,27 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def rsqrt(lr: float, warmup_steps: int):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        return lr * jnp.minimum(step / warmup_steps, jnp.sqrt(warmup_steps / step))
+    return f

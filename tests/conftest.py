@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+import jax
+
+# Smoke tests and benches must see 1 device (the dry-run sets 512 itself,
+# in its own process).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

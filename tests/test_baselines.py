@@ -1,0 +1,102 @@
+"""Every solver the paper compares against must reach the Lasso optimum on a
+small problem (Fig. 3's comparison at test scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as obj
+from repro.core.baselines import (fista, fpc_as, gpsr, iht, l1_ls, sgd,
+                                  smidas, sparsa)
+from repro.core.shotgun import shotgun_solve
+from repro.data import synthetic as syn
+
+
+@pytest.fixture(scope="module")
+def lasso_prob():
+    A, y, _ = syn.sparco(seed=0, n=128, d=96)
+    return obj.make_problem(A, y, lam=0.5)
+
+
+@pytest.fixture(scope="module")
+def fstar(lasso_prob):
+    return float(fista.fista_solve(lasso_prob, 5000).objective[-1])
+
+
+def test_fista(lasso_prob, fstar):
+    assert float(fista.fista_solve(lasso_prob, 2000).objective[-1]) \
+        <= fstar * 1.002 + 1e-4
+
+
+def test_sparsa(lasso_prob, fstar):
+    assert float(sparsa.sparsa_solve(lasso_prob, 2000).objective[-1]) \
+        <= fstar * 1.005 + 1e-3
+
+
+def test_gpsr(lasso_prob, fstar):
+    assert float(gpsr.gpsr_bb_solve(lasso_prob, 2000).objective[-1]) \
+        <= fstar * 1.005 + 1e-3
+
+
+def test_fpc_as(lasso_prob, fstar):
+    assert float(fpc_as.fpc_as_solve(lasso_prob).objective[-1]) \
+        <= fstar * 1.005 + 1e-3
+
+
+def test_l1_ls(lasso_prob, fstar):
+    assert float(l1_ls.l1_ls_solve(lasso_prob, outer=30).objective[-1]) \
+        <= fstar * 1.01 + 1e-3
+
+
+def test_iht_recovers_support():
+    """Hard_l0 is for compressed sensing: exact-sparsity recovery, so check
+    support recovery on a well-conditioned problem instead of F*."""
+    A, y, xt = syn.singlepixcam(seed=1, n=256, d=128, nnz_frac=0.04)
+    prob = obj.make_problem(A, y, lam=0.0, normalize=False)
+    s = int((np.abs(xt) > 0).sum())
+    res = iht.iht_solve(prob, s=s, iters=500)
+    got = set(np.nonzero(np.asarray(res.x))[0].tolist())
+    want = set(np.nonzero(xt)[0].tolist())
+    assert len(got & want) >= int(0.9 * len(want))
+
+
+def test_sgd_logistic_decreases():
+    """The paper's SGD protocol: 14 exponential rates, keep the best
+    training objective (Sec. 4.2.2); here 7 rates for CPU time."""
+    A, y, _ = syn.logistic_data(seed=2, n=512, d=64)
+    prob = obj.make_problem(A, y, lam=0.05, loss=obj.LOGISTIC)
+    best, rate = sgd.sgd_rate_search(prob, jax.random.PRNGKey(0), steps=20000,
+                                     rates=np.geomspace(1e-3, 1.0, 7))
+    f0 = float(obj.objective(jnp.zeros(prob.d), prob))
+    assert float(best.objective[-1]) < 0.75 * f0
+
+
+def test_sgd_rate_search_picks_finite():
+    A, y, _ = syn.logistic_data(seed=5, n=128, d=32)
+    prob = obj.make_problem(A, y, lam=0.05, loss=obj.LOGISTIC)
+    best, rate = sgd.sgd_rate_search(prob, jax.random.PRNGKey(0), steps=500,
+                                     rates=np.geomspace(1e-3, 1.0, 5))
+    assert np.isfinite(float(best.objective[-1]))
+    assert 1e-3 <= rate <= 1.0
+
+
+def test_parallel_sgd_averaging():
+    A, y, _ = syn.logistic_data(seed=3, n=512, d=64)
+    prob = obj.make_problem(A, y, lam=0.05, loss=obj.LOGISTIC)
+    res = sgd.parallel_sgd_solve(prob, jax.random.PRNGKey(0), eta=1.0,
+                                 steps=20000, K=4)
+    f0 = float(obj.objective(jnp.zeros(prob.d), prob))
+    assert float(res.objective[-1]) < 0.8 * f0
+
+
+def test_smidas_decreases():
+    A, y, _ = syn.logistic_data(seed=4, n=256, d=64)
+    prob = obj.make_problem(A, y, lam=0.05, loss=obj.LOGISTIC)
+    res = smidas.smidas_solve(prob, jax.random.PRNGKey(0), eta=0.05, steps=4000)
+    f0 = float(obj.objective(jnp.zeros(prob.d), prob))
+    assert float(res.objective[-1]) < 0.8 * f0
+
+
+def test_shotgun_matches_proximal_optimum(lasso_prob, fstar):
+    res = shotgun_solve(lasso_prob, jax.random.PRNGKey(0), P=16, rounds=1500)
+    assert float(res.trace.objective[-1]) <= fstar * 1.005 + 1e-3

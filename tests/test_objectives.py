@@ -1,0 +1,69 @@
+"""Objective/gradient correctness for the paper's two losses (Eq. 2-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as obj
+from repro.data import synthetic as syn
+
+
+@pytest.mark.parametrize("loss", [obj.LASSO, obj.LOGISTIC])
+def test_residual_matches_autodiff(loss):
+    """residual_like is dL/dz, so A^T r must equal the autodiff gradient of
+    the data loss at several points."""
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.standard_normal((40, 17)), jnp.float32)
+    y = jnp.asarray(np.sign(rng.standard_normal(40)) if loss == obj.LOGISTIC
+                    else rng.standard_normal(40), jnp.float32)
+    for seed in range(3):
+        x = jnp.asarray(np.random.default_rng(seed).standard_normal(17), jnp.float32)
+        g_auto = jax.grad(lambda x: obj.data_loss_from_margin(A @ x, y, loss))(x)
+        r = obj.residual_like(A @ x, y, loss)
+        np.testing.assert_allclose(A.T @ r, g_auto, rtol=2e-4, atol=2e-4)
+
+
+def test_normalize_columns():
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.standard_normal((30, 12)) * rng.uniform(0.1, 10, 12),
+                    jnp.float32)
+    An, scales = obj.normalize_columns(A)
+    np.testing.assert_allclose(jnp.sum(An * An, axis=0), np.ones(12), rtol=1e-5)
+    np.testing.assert_allclose(An * scales[None, :], A, rtol=1e-5)
+
+
+def test_soft_threshold():
+    v = jnp.array([-3.0, -0.5, 0.0, 0.5, 3.0])
+    out = obj.soft_threshold(v, 1.0)
+    np.testing.assert_allclose(out, [-2.0, 0.0, 0.0, 0.0, 2.0])
+
+
+@pytest.mark.parametrize("loss", [obj.LASSO, obj.LOGISTIC])
+def test_lambda_max_zero_is_optimal(loss):
+    """At lam >= lambda_max, x = 0 must be a fixed point of the shooting
+    update for every coordinate."""
+    A, y, _ = (syn.sparco(seed=3, n=60, d=30) if loss == obj.LASSO
+               else syn.logistic_data(seed=3, n=60, d=30))
+    prob = obj.make_problem(A, y, lam=1.0, loss=loss)
+    lmax = obj.lambda_max(prob.A, prob.y, loss)
+    z0 = jnp.zeros(prob.n)
+    r = obj.residual_like(z0, prob.y, loss)
+    g = prob.A.T @ r
+    delta = obj.shooting_delta(jnp.zeros(prob.d), g, lmax * 1.0001, prob.beta)
+    np.testing.assert_allclose(delta, 0.0, atol=1e-7)
+    # and strictly below lambda_max at least one coordinate moves
+    delta = obj.shooting_delta(jnp.zeros(prob.d), g, lmax * 0.5, prob.beta)
+    assert float(jnp.max(jnp.abs(delta))) > 0
+
+
+def test_dup_equivalence():
+    """Eq. 4's duplicated-feature objective agrees with the signed form."""
+    A, y, _ = syn.sparco(seed=4, n=40, d=20)
+    prob = obj.make_problem(A, y, lam=0.3)
+    dp = obj.dup_from(prob)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(20), jnp.float32)
+    xhat = jnp.concatenate([jnp.maximum(x, 0), jnp.maximum(-x, 0)])
+    np.testing.assert_allclose(obj.dup_objective(xhat, dp),
+                               obj.objective(x, prob), rtol=1e-5)
+    np.testing.assert_allclose(obj.dup_to_signed(xhat), x, rtol=1e-6)

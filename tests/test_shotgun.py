@@ -1,0 +1,91 @@
+"""Shotgun/Shooting solver behaviour: convergence, P-speedup, divergence —
+the empirical claims of Sec. 3.2 / Fig. 2 at test scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as obj
+from repro.core.shotgun import (shotgun_solve, shooting_solve,
+                                shotgun_dup_solve, rounds_to_tolerance,
+                                diverged)
+from repro.core.spectral import spectral_radius, p_star
+from repro.core.baselines.fista import fista_solve
+from repro.data import synthetic as syn
+
+
+def _fstar(prob, iters=4000):
+    return float(fista_solve(prob, iters).objective[-1])
+
+
+@pytest.mark.parametrize("loss", [obj.LASSO, obj.LOGISTIC])
+def test_shooting_converges(loss):
+    A, y, _ = (syn.sparco(seed=0, n=100, d=50) if loss == obj.LASSO
+               else syn.logistic_data(seed=0, n=100, d=50))
+    prob = obj.make_problem(A, y, lam=0.5, loss=loss)
+    res = shooting_solve(prob, jax.random.PRNGKey(0), rounds=4000)
+    fstar = _fstar(prob)
+    assert float(res.trace.objective[-1]) <= fstar * 1.005 + 1e-3
+    # objective is (stochastically) decreasing overall
+    f = np.asarray(res.trace.objective)
+    assert f[-1] < f[0]
+
+
+def test_shotgun_matches_shooting_fixed_point():
+    A, y, _ = syn.sparco(seed=1, n=120, d=60)
+    prob = obj.make_problem(A, y, lam=0.5)
+    f8 = float(shotgun_solve(prob, jax.random.PRNGKey(1), P=8,
+                             rounds=3000).trace.objective[-1])
+    f1 = float(shooting_solve(prob, jax.random.PRNGKey(2),
+                              rounds=6000).trace.objective[-1])
+    assert abs(f8 - f1) / abs(f1) < 0.01
+
+
+def test_dup_form_matches_signed_form():
+    """Alg. 2 verbatim on Eq. 4 reaches the same objective as the practical
+    signed soft-threshold form."""
+    A, y, _ = syn.sparco(seed=2, n=80, d=40)
+    prob = obj.make_problem(A, y, lam=0.5)
+    dp = obj.dup_from(prob)
+    f_dup = float(shotgun_dup_solve(dp, jax.random.PRNGKey(0), P=4,
+                                    rounds=4000).trace.objective[-1])
+    f_sgn = float(shotgun_solve(prob, jax.random.PRNGKey(0), P=4,
+                                rounds=4000).trace.objective[-1])
+    assert abs(f_dup - f_sgn) / abs(f_sgn) < 0.01
+
+
+def test_parallel_speedup_in_iterations():
+    """T(P) should shrink ~1/P for P well below P* (Thm 3.2)."""
+    A, y, _ = syn.sparco(seed=3, n=256, d=512)   # iid -> rho small, P* large
+    prob = obj.make_problem(A, y, lam=1.0)
+    ps = int(p_star(prob.A))
+    assert ps > 16   # iid design: plenty of parallelism
+    fstar = _fstar(prob)
+    t1 = int(rounds_to_tolerance(
+        shotgun_solve(prob, jax.random.PRNGKey(0), P=1, rounds=40000)
+        .trace.objective, fstar))
+    t8 = int(rounds_to_tolerance(
+        shotgun_solve(prob, jax.random.PRNGKey(0), P=8, rounds=8000)
+        .trace.objective, fstar))
+    assert t1 < 40000    # P=1 does converge within budget
+    assert t8 < t1 / 4   # near-linear: expect ~t1/8, allow 2x slack
+
+
+def test_divergence_past_pstar():
+    """Strongly correlated designs (rho ~ d) must diverge for P >> P*."""
+    A, y, _ = syn.sparco(seed=4, n=128, d=256, corr=0.95)
+    prob = obj.make_problem(A, y, lam=0.1)
+    ps = int(p_star(prob.A))
+    assert ps <= 4   # correlated: almost no parallelism available
+    res = shotgun_dup_solve(obj.dup_from(prob), jax.random.PRNGKey(0),
+                            P=max(64, 32 * ps), rounds=300)
+    assert bool(diverged(res.trace.objective))
+
+
+def test_maintained_margin_consistency():
+    """z returned by the solver must equal A @ x (the maintained-Ax trick
+    cannot drift)."""
+    A, y, _ = syn.sparse_imaging(seed=5, n=120, d=240)
+    prob = obj.make_problem(A, y, lam=0.5)
+    res = shotgun_solve(prob, jax.random.PRNGKey(3), P=4, rounds=500)
+    np.testing.assert_allclose(res.z, prob.A @ res.x, rtol=2e-3, atol=2e-3)
