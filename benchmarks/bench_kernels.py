@@ -1,19 +1,36 @@
-"""Kernel-layer microbenchmark: per-round cost of Block-Shotgun vs the
-scalar-gather round it replaces (CPU timings; the TPU claim is structural —
-arithmetic intensity O(block) vs O(1), see DESIGN §4)."""
+"""Kernel-layer microbenchmark (DESIGN §4.4): per-round cost of
+
+  * the scalar Shotgun round it all replaces (P = K·128 gathered columns),
+  * the two-kernel Block-Shotgun round (gather + scatter pallas_call, z/r/g
+    round-tripping through XLA between launches),
+  * the fused multi-round kernel — ONE pallas_call per R rounds with z
+    resident in VMEM (2 launches/round -> 1/R launches/round).
+
+CPU interpret-mode timings; the TPU claims are structural (arithmetic
+intensity O(block) vs O(1); A-stream traffic halved in the single-phase
+fused kernel; launch/dispatch cost amortized R×).  Emits the repo-root
+``BENCH_kernels.json`` perf-trajectory point.
+
+Env: BENCH_SMOKE=1 shrinks to the small shape only (CI smoke).
+"""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
+from benchmarks.roofline import shotgun_round_model
 from repro.core import objectives as obj
 from repro.core.shotgun import shotgun_solve
 from repro.data import synthetic as syn
 from repro.kernels import ops
+from repro.kernels.shotgun_block import fused_shotgun_rounds
+
+ROUNDS_PER_LAUNCH = 8
+K = 4
 
 
 def _time(fn, reps=5):
@@ -25,28 +42,53 @@ def _time(fn, reps=5):
 
 
 def run() -> list[dict]:
+    shapes = [(1024, 2048)]
+    if not os.environ.get("BENCH_SMOKE"):
+        shapes.append((2048, 8192))
     rows = []
-    for (n, d) in [(1024, 2048), (2048, 8192)]:
+    for (n, d) in shapes:
         A, y, _ = syn.sparco(seed=0, n=n, d=d)
         prob = obj.make_problem(A, y, lam=0.5)
         Ap, yp, mask = ops.pad_problem(prob.A, prob.y)
         x = jnp.zeros(Ap.shape[1])
         z = jnp.zeros(Ap.shape[0])
-        blk = jnp.arange(4, dtype=jnp.int32)
+        blk = jnp.arange(K, dtype=jnp.int32)
+        R = ROUNDS_PER_LAUNCH
+        idx = (jnp.arange(R * K, dtype=jnp.int32).reshape(R, K)
+               % (Ap.shape[1] // ops.BLOCK))
 
-        us_blk = _time(lambda: ops.block_shotgun_round(
+        us_two = _time(lambda: ops.block_shotgun_round(
             Ap, z, x, blk, prob.lam, prob.beta, yp, mask, interpret=True))
-        # scalar Shotgun round with the same effective P = 4*128
+        us_fused_launch = _time(lambda: fused_shotgun_rounds(
+            Ap, z, x, idx, prob.lam, prob.beta, yp, mask, interpret=True))
+        us_fused = us_fused_launch / R
+        # scalar Shotgun round with the same effective P = K*128
         us_scalar = _time(lambda: shotgun_solve(
-            prob, jax.random.PRNGKey(0), P=4 * ops.BLOCK, rounds=1))
-        rows.append({"n": n, "d": d, "P_eff": 4 * ops.BLOCK,
-                     "block_round_us": round(us_blk, 1),
-                     "scalar_round_us": round(us_scalar, 1),
-                     "flops_per_byte_block": ops.BLOCK,
-                     "flops_per_byte_scalar": 1})
-        print(f"kernels,n={n},d={d},block_round={us_blk:.0f}us,"
-              f"scalar_round={us_scalar:.0f}us", flush=True)
-    return emit(rows, "bench_kernels")
+            prob, jax.random.PRNGKey(0), P=K * ops.BLOCK, rounds=1))
+        model = shotgun_round_model(Ap.shape[0], Ap.shape[1], K,
+                                    block=ops.BLOCK)
+        rows.append({
+            "n": n, "d": d, "K": K, "P_eff": K * ops.BLOCK,
+            "rounds_per_launch": R,
+            "fused_round_us": round(us_fused, 1),
+            "block_round_us": round(us_two, 1),
+            "scalar_round_us": round(us_scalar, 1),
+            "launches_per_round_fused": 1.0 / R,
+            "launches_per_round_block": 2,
+            "speedup_fused_vs_block": round(us_two / us_fused, 2),
+            "hbm_bytes_per_round_fused": model["fused"]["bytes"],
+            "hbm_bytes_per_round_block": model["two_kernel"]["bytes"],
+            "flops_per_byte_fused": round(model["fused"]["intensity"], 3),
+            "flops_per_byte_block": round(model["two_kernel"]["intensity"], 3),
+            "flops_per_byte_scalar": round(model["scalar"]["intensity"], 3),
+        })
+        print(f"kernels,n={n},d={d},K={K},fused_round={us_fused:.0f}us,"
+              f"block_round={us_two:.0f}us,scalar_round={us_scalar:.0f}us,"
+              f"speedup={us_two / us_fused:.2f}x", flush=True)
+    # the repo-root trajectory point is reserved for full runs — a smoke
+    # pass must not clobber the committed two-shape artifact
+    root = None if os.environ.get("BENCH_SMOKE") else "BENCH_kernels.json"
+    return emit(rows, "bench_kernels", root_name=root)
 
 
 if __name__ == "__main__":

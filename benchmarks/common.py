@@ -8,6 +8,7 @@ import time
 import jax
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def fstar_of(prob, iters=6000) -> float:
@@ -23,8 +24,15 @@ def timed(fn, *args, **kw):
     return out, time.time() - t0
 
 
-def emit(rows, name):
-    """Write rows (list of dicts) to results/<name>.json and echo CSV."""
+def emit(rows, name, root_name=None):
+    """Write rows (list of dicts) to results/<name>.json and echo CSV.
+
+    ``root_name`` additionally writes a repo-root copy (e.g.
+    ``BENCH_kernels.json``) — the committed perf-trajectory point that
+    successive PRs append to the history of."""
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    payload = json.dumps(rows, indent=1)
+    (RESULTS / f"{name}.json").write_text(payload)
+    if root_name:
+        (REPO_ROOT / root_name).write_text(payload)
     return rows

@@ -1,11 +1,60 @@
 """Roofline table assembly: reads the dry-run JSONs (launch/dryrun.py) and
-prints the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md."""
+prints the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md,
+plus the analytic HBM-traffic model of the Shotgun kernel variants
+(DESIGN §4.4)."""
 from __future__ import annotations
 
 import json
 import pathlib
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+# v4-class TPU used for the per-round analytic model
+HBM_GBPS = 1200e9
+MXU_FLOPS = 275e12
+
+
+def shotgun_round_model(n, d, K, block=128, a_bytes=4, fused_single=None):
+    """Per-round HBM bytes / flops / roofline time for the three kernels.
+
+    scalar       P=K·block gathered columns; O(1) flops/byte.
+    two-kernel   gather + scatter launches: A blocks streamed twice, plus
+                 z, r, g, delta round-tripping through HBM between launches.
+    fused        single launch; z/r/g/delta stay in VMEM.  In single-phase
+                 mode (one sample tile) each A block streams ONCE per round;
+                 whether (n, d) gets single-phase is decided by the kernel's
+                 own VMEM heuristic unless overridden.
+    """
+    if fused_single is None:
+        from repro.kernels.shotgun_block import auto_tile_n
+        fused_single = auto_tile_n(n, block, d=d) == n
+    P = K * block
+    a_blk = n * block * a_bytes
+    vec = n * 4
+    rows = {}
+    rows["scalar"] = {"bytes": P * n * a_bytes + 3 * vec,
+                      "flops": 4 * P * n}
+    rows["two_kernel"] = {"bytes": 2 * K * a_blk + 6 * vec + 4 * K * block * 4,
+                          "flops": 4 * K * block * n}
+    rows["fused"] = {"bytes": (1 if fused_single else 2) * K * a_blk,
+                     "flops": 4 * K * block * n}
+    for name, r in rows.items():
+        r["intensity"] = r["flops"] / r["bytes"]
+        r["t_mem_us"] = r["bytes"] / HBM_GBPS * 1e6
+        r["t_flops_us"] = r["flops"] / MXU_FLOPS * 1e6
+        r["bound"] = "memory" if r["t_mem_us"] > r["t_flops_us"] else "compute"
+    return rows
+
+
+def shotgun_table(shapes=((1024, 2048, 4), (2048, 8192, 4))):
+    out = [f"{'kernel':12s} {'n':>6s} {'d':>6s} {'K':>3s} {'GB/round':>10s} "
+           f"{'flops/B':>8s} {'t_mem_us':>9s} {'bound':>7s}"]
+    for (n, d, K) in shapes:
+        for name, r in shotgun_round_model(n, d, K).items():
+            out.append(f"{name:12s} {n:6d} {d:6d} {K:3d} "
+                       f"{r['bytes'] / 1e9:10.6f} {r['intensity']:8.1f} "
+                       f"{r['t_mem_us']:9.3f} {r['bound']:>7s}")
+    return "\n".join(out)
 
 
 def load(tag="final"):
@@ -39,6 +88,7 @@ def fmt_table(rows, mesh="single"):
 
 
 def run():
+    print(shotgun_table(), flush=True)
     rows = load("final")
     for mesh in ("single", "multi"):
         n_ok = sum(1 for r in rows if r.get("mesh") == mesh and r["status"] == "ok")

@@ -42,6 +42,14 @@ def main():
     print(f"Block-Shotgun (K = {K} blocks of {ops.BLOCK}): "
           f"F = {float(res_blk.trace.objective[-1]):.4f}")
 
+    # 2b. fused multi-round kernel (DESIGN §4.2): one pallas_call per 10
+    #     rounds, margin resident in VMEM; identical trajectory to (2)
+    res_fus = ops.block_shotgun_solve(prob, jax.random.PRNGKey(0), K=K,
+                                      rounds=500, interpret=True,
+                                      fused=True, rounds_per_launch=10)
+    print(f"fused Block-Shotgun (R = 10/launch): "
+          f"F = {float(res_fus.trace.objective[-1]):.4f}")
+
     # 3. reference: single-device scalar Shotgun
     ref = shotgun_solve(prob, jax.random.PRNGKey(1), P=K * ops.BLOCK,
                         rounds=500)

@@ -1,0 +1,23 @@
+"""Version shims for jax APIs that moved between releases.
+
+``shard_map``: lives at ``jax.experimental.shard_map`` until ~0.5, then moves
+to ``jax.shard_map``; the replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way.  Callers here always pass
+``check_vma`` and the shim translates for older jax.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KW = "check_vma" if "check_vma" in _PARAMS else "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    kw = {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

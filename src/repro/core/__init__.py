@@ -4,16 +4,21 @@ Public API:
     make_problem, Problem, objective, lambda_max          (objectives)
     shooting_solve, shotgun_solve, shotgun_dup_solve      (Alg. 1 / Alg. 2)
     shotgun_cdn_solve, shooting_cdn_solve                 (CDN variants)
+    get_solver, SOLVER_NAMES                              (solver selection)
     spectral_radius, p_star                               (parallelism limit)
     solve_path                                            (lambda continuation)
     shotgun_sharded_solve                                 (multi-device)
+
+The Pallas solvers (``block`` / ``block_fused`` in ``get_solver``) live in
+``repro.kernels.ops`` to keep core import-light.
 """
 from repro.core.objectives import (LASSO, LOGISTIC, Problem, DupProblem,
                                    make_problem, dup_from, objective,
                                    lambda_max, soft_threshold)
 from repro.core.shotgun import (shooting_solve, shotgun_solve,
                                 shotgun_dup_solve, rounds_to_tolerance,
-                                diverged, Result, Trace)
+                                diverged, get_solver, SOLVER_NAMES,
+                                Result, Trace)
 from repro.core.cdn import shotgun_cdn_solve, shooting_cdn_solve
 from repro.core.spectral import spectral_radius, p_star, p_star_dup
 from repro.core.path import solve_path, lambda_sequence

@@ -122,6 +122,50 @@ def shotgun_dup_solve(dp: DupProblem, key: jax.Array, P: int, rounds: int,
 
 
 # ---------------------------------------------------------------------------
+# Solver selection
+# ---------------------------------------------------------------------------
+
+SOLVER_NAMES = ("shooting", "shotgun", "shotgun_dup", "shotgun_cdn",
+                "shooting_cdn", "block", "block_fused", "sharded")
+
+
+def get_solver(name: str):
+    """Uniform entry point over every Shotgun-family solver.
+
+    Returns the solve callable for ``name`` (see ``SOLVER_NAMES``):
+
+      shooting / shotgun / shotgun_dup   this module (Alg. 1 / Alg. 2)
+      shotgun_cdn / shooting_cdn         CDN inner-Newton variants
+      block                              Pallas two-kernel Block-Shotgun
+      block_fused                        fused multi-round Pallas kernel
+      sharded                            multi-device shard_map solver
+
+    Kernel/sharded solvers are imported lazily: ``repro.kernels.ops`` and
+    ``repro.core.sharded`` both import this module at load time.
+    """
+    if name == "shooting":
+        return shooting_solve
+    if name == "shotgun":
+        return shotgun_solve
+    if name == "shotgun_dup":
+        return shotgun_dup_solve
+    if name in ("shotgun_cdn", "shooting_cdn"):
+        from repro.core import cdn
+        return {"shotgun_cdn": cdn.shotgun_cdn_solve,
+                "shooting_cdn": cdn.shooting_cdn_solve}[name]
+    if name == "block":
+        from repro.kernels import ops
+        return ops.block_shotgun_solve
+    if name == "block_fused":
+        from repro.kernels import ops
+        return ops.fused_block_shotgun_solve
+    if name == "sharded":
+        from repro.core import sharded
+        return sharded.shotgun_sharded_solve
+    raise ValueError(f"unknown solver {name!r}; choose from {SOLVER_NAMES}")
+
+
+# ---------------------------------------------------------------------------
 # Convergence utilities
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,9 @@
+"""Distributed-training plumbing: gradient compression + hierarchical
+collectives (DESIGN §7).  Kept separate from ``repro.core`` — the solvers
+only depend on ``jax.lax`` collectives; this package is the wire-format
+layer used by the LM training driver and the multi-pod benchmarks."""
+from repro.dist.compression import (QuantInt8, TopK, quantize_int8,
+                                    dequantize_int8, topk_compress,
+                                    topk_decompress, ef_init, compress_grads,
+                                    wire_bytes)
+from repro.dist.collectives import hierarchical_psum

@@ -1,0 +1,25 @@
+"""Hierarchical collectives (DESIGN §7).
+
+On a (pod × data) mesh the flat all-reduce pays the slow inter-pod links for
+the full vector.  ``hierarchical_psum`` instead does
+
+    reduce-scatter over the fast inner axes
+    -> psum of the 1/inner-size shard over the outer (inter-pod) axis
+    -> all-gather back over the inner axes
+
+so the slow hop carries only ``1/prod(inner sizes)`` of the bytes.  Must be
+called inside shard_map with all named axes in scope; dim 0 of the operand
+must be divisible by the inner axis sizes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def hierarchical_psum(x: jax.Array, outer_axis: str, inner_axes=()):
+    for ax in inner_axes:
+        x = jax.lax.psum_scatter(x, ax, scatter_dimension=0, tiled=True)
+    x = jax.lax.psum(x, outer_axis)
+    for ax in reversed(tuple(inner_axes)):
+        x = jax.lax.all_gather(x, ax, axis=0, tiled=True)
+    return x

@@ -1,4 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot-spot (Block-Shotgun)."""
-from repro.kernels.shotgun_block import (BLOCK, TILE_N, gather_block_matvec,
+from repro.kernels.shotgun_block import (BLOCK, TILE_N, auto_tile_n,
+                                         fused_shotgun_rounds,
+                                         gather_block_matvec,
                                          scatter_block_update)
-from repro.kernels.ops import block_shotgun_round, block_shotgun_solve, pad_problem
+from repro.kernels.ops import (block_shotgun_round, block_shotgun_solve,
+                               fused_block_shotgun_solve, pad_problem)

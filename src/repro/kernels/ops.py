@@ -1,8 +1,16 @@
 """Public jit'd wrappers around the Pallas Block-Shotgun kernels.
 
-``block_shotgun_round``  one synchronous round: K random aligned blocks of
-                         128 coordinates updated in parallel (P_eff = K·128).
-``block_shotgun_solve``  full solver built on the kernels (scan over rounds).
+``block_shotgun_round``   one synchronous round: K random aligned blocks of
+                          128 coordinates updated in parallel (P_eff = K·128),
+                          issued as two pallas_call launches.
+``fused_shotgun_rounds``  R rounds in ONE pallas_call with the margin z (and
+                          the residual/iterate/deltas) resident in VMEM —
+                          see shotgun_block.py and DESIGN §4.2.
+``block_shotgun_solve``   full solver.  ``fused=False`` scans over rounds
+                          (two launches each); ``fused=True`` scans over
+                          *launches* of ``rounds_per_launch`` fused rounds.
+                          Both draw identical block indices from the same
+                          key, so their traces coincide.
 
 On CPU (this container) pass ``interpret=True``; on TPU the same code path
 compiles to Mosaic.  ``ref.py`` holds the pure-jnp oracles used by the tests.
@@ -10,7 +18,6 @@ compiles to Mosaic.  ``ref.py`` holds the pure-jnp oracles used by the tests.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +25,9 @@ import jax.numpy as jnp
 from repro.core import objectives as obj
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
-from repro.kernels.shotgun_block import (BLOCK, TILE_N, gather_block_matvec,
+from repro.kernels.shotgun_block import (BLOCK, TILE_N, auto_tile_n,
+                                         fused_shotgun_rounds,
+                                         gather_block_matvec,
                                          scatter_block_update)
 
 
@@ -79,14 +88,74 @@ def _solve(A, y, mask, lam, beta, key, K, rounds, block, loss, interpret):
     return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
 
 
+@functools.partial(jax.jit, static_argnames=("K", "rounds", "R", "block",
+                                             "tile_n", "loss", "interpret"))
+def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
+                 loss, interpret):
+    """Scan over launches: one fused pallas_call per R rounds.
+
+    Draws the same per-round keys/indices as ``_solve`` (jax.random.split of
+    the same key, same choice() calls), so the two trajectories coincide.
+    """
+    n, d = A.shape
+    nblk = d // block
+    L = rounds // R
+    x0 = jnp.zeros(d, jnp.float32)
+    z0 = jnp.zeros(n, jnp.float32)
+    draw = functools.partial(jax.random.choice, a=nblk, shape=(K,),
+                             replace=False)
+
+    def launch_fn(carry, keys_l):
+        x, z = carry
+        idx = jax.vmap(lambda kt: draw(kt))(keys_l).astype(jnp.int32)
+        x, z, fs, nnzs = fused_shotgun_rounds(
+            A, z, x, idx, lam, beta, y, mask, loss=loss, block=block,
+            tile_n=tile_n, interpret=interpret)
+        return (x, z), (fs, nnzs)
+
+    keys = jax.random.split(key, rounds).reshape(L, R, -1)
+    (x, z), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0), keys)
+    return Result(x=x, z=z,
+                  trace=Trace(objective=fs.reshape(rounds),
+                              nnz=nnzs.reshape(rounds)))
+
+
 def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
-                        block: int = BLOCK, interpret: bool = True) -> Result:
+                        block: int = BLOCK, interpret: bool = True,
+                        fused: bool = False, rounds_per_launch: int = 8,
+                        tile_n: int | None = None) -> Result:
     """TPU-native Shotgun: K parallel blocks of `block` coordinates/round.
 
     Effective parallelism P = K * block must respect Thm 3.2's
     P < d/rho + 1 (checked by the caller via ``core.spectral.p_star``).
+
+    ``fused=True`` runs ``rounds_per_launch`` rounds per kernel launch with
+    the margin held in VMEM (must divide ``rounds``); the trajectory and
+    trace are the same as the two-kernel path for the same key.
     """
     A, y, mask = pad_problem(prob.A, prob.y)
-    res = _solve(A, y, mask, prob.lam, prob.beta, key, K, rounds, block,
-                 prob.loss, interpret)
+    if fused:
+        if rounds % rounds_per_launch:
+            raise ValueError(
+                f"rounds={rounds} not divisible by "
+                f"rounds_per_launch={rounds_per_launch}")
+        if tile_n is None:
+            tile_n = auto_tile_n(A.shape[0], block, d=A.shape[1])
+        res = _fused_solve(A, y, mask.astype(jnp.float32), prob.lam,
+                           prob.beta, key, K, rounds, rounds_per_launch,
+                           block, tile_n, prob.loss, interpret)
+    else:
+        res = _solve(A, y, mask, prob.lam, prob.beta, key, K, rounds, block,
+                     prob.loss, interpret)
     return Result(x=res.x[: prob.d], z=res.z, trace=res.trace)
+
+
+def fused_block_shotgun_solve(prob: Problem, key: jax.Array, K: int,
+                              rounds: int, rounds_per_launch: int = 8,
+                              block: int = BLOCK, tile_n: int | None = None,
+                              interpret: bool = True) -> Result:
+    """Convenience alias: ``block_shotgun_solve(..., fused=True)``."""
+    return block_shotgun_solve(prob, key, K, rounds, block=block,
+                               interpret=interpret, fused=True,
+                               rounds_per_launch=rounds_per_launch,
+                               tile_n=tile_n)

@@ -31,6 +31,40 @@ def scatter_block_update_ref(A, z, blk_idx, delta, block: int):
     return (z.astype(jnp.float32) + dz).astype(z.dtype)
 
 
+def fused_shotgun_rounds_ref(A, z, x, blk_idx, lam, beta, y, mask, loss,
+                             block: int):
+    """Multi-round oracle for ``shotgun_block.fused_shotgun_rounds``.
+
+    blk_idx: (R, K) int32 — duplicates within a row follow Alg. 2's multiset
+    semantics (all deltas from the pre-round iterate, then accumulated).
+    Returns (x (d,) f32, z (n,) f32, f (R,) f32, nnz (R,) int32).
+    """
+    from repro.core import objectives as obj
+    x = x.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+
+    def round_fn(carry, idx_t):
+        x, z = carry
+        r = obj.residual_like(z, y, loss) * mask
+        g = gather_block_matvec_ref(A32, r, idx_t, block)
+        xb = x.reshape(-1, block)
+        x_sel = jnp.take(xb, idx_t, axis=0)
+        x_new = obj.soft_threshold(x_sel - g / beta, lam / beta)
+        delta = x_new - x_sel
+        z = scatter_block_update_ref(A32, z, idx_t, delta, block)
+        x = xb.at[idx_t].add(delta).reshape(-1)
+        if loss == obj.LASSO:
+            f = 0.5 * jnp.vdot(z - y, (z - y) * mask) + lam * jnp.sum(jnp.abs(x))
+        else:
+            f = (jnp.sum(mask * jnp.logaddexp(0.0, -y * z))
+                 + lam * jnp.sum(jnp.abs(x)))
+        return (x, z), (f, jnp.sum(x != 0))
+
+    (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x, z), blk_idx)
+    return x, z, fs, nnzs.astype(jnp.int32)
+
+
 def block_shotgun_round_ref(A, z, x, blk_idx, lam, beta, y, loss, block: int):
     """One full Block-Shotgun round (oracle for ops.block_shotgun_round)."""
     from repro.core import objectives as obj

@@ -11,14 +11,27 @@ block of 128 coordinates* at a time so that
   * the gradient gather g_B = A_B^T r and the margin update z += A_B δ are
     (TILE_N × 128) MXU matmuls — arithmetic intensity O(128) flops/byte.
 
-Two kernels, both tiled over the sample dimension n:
+Two single-round kernels, both tiled over the sample dimension n:
 
   gather_block_matvec   g[k] = A[:, blk_k]ᵀ r        grid (K, T), accumulate over T
   scatter_block_update  z   += Σ_k A[:, blk_k] δ_k    grid (T, K), accumulate over K
 
+and the fused multi-round kernel (DESIGN §4.2):
+
+  fused_shotgun_rounds_kernel   R rounds per launch; the margin z, the
+  round-start residual r, the iterate x, and the per-round deltas all live
+  in VMEM scratch across the whole launch, so streamed column blocks of A
+  are the only per-round HBM traffic.  A scalar-prefetched (R, K) index
+  matrix selects the blocks each round touches.  When one sample tile
+  covers all of n (T == 1) the kernel runs single-phase — each A block is
+  fetched ONCE per round and used for both g_B = A_Bᵀ r and z += A_B δ —
+  halving A traffic vs. the two-kernel round; otherwise it runs the same
+  gather/scatter phases as above but without the z/r/g HBM round trips.
+
 Block size B = 128 (MXU/lane width); TILE_N default 512 keeps the f32
 working set (512·128·4B · 2 operands · 2 buffers ≈ 1 MB) comfortably in
-the ~16 MB VMEM budget with double buffering.
+the ~16 MB VMEM budget with double buffering.  VMEM budget math for the
+fused kernel is in DESIGN §4.3.
 """
 from __future__ import annotations
 
@@ -126,3 +139,219 @@ def scatter_block_update(A, z, blk_idx, delta, block: int = BLOCK,
         interpret=interpret,
     )(blk_idx, A, delta.astype(A.dtype), z.reshape(n, 1))
     return out.reshape(n).astype(z.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: fused multi-round Block-Shotgun — R rounds per launch, z in VMEM
+# ---------------------------------------------------------------------------
+
+LASSO = "lasso"      # kept in sync with repro.core.objectives (string keys
+LOGISTIC = "logistic"  # only; kernels stay import-independent of core)
+
+
+def _soft_threshold(v, t):
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def _residual(z, y, m, loss: str):
+    """dL/dz masked to real samples; matches objectives.residual_like."""
+    if loss == LASSO:
+        return (z - y) * m
+    return (-y * jax.nn.sigmoid(-y * z)) * m
+
+
+def _round_objective(z, y, m, x, lam, loss: str):
+    """F(x) from the VMEM-resident margin/iterate; matches ops._solve."""
+    if loss == LASSO:
+        e = z - y
+        data = 0.5 * jnp.sum(e * (e * m))
+    else:
+        data = jnp.sum(m * jnp.logaddexp(0.0, -y * z))
+    return data + lam * jnp.sum(jnp.abs(x))
+
+
+def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
+                       tile_n: int):
+    """Kernel body factory.  grid = (R, K) when T == 1 (single-phase: each A
+    block fetched once per round), else (R, K, 2, T) (gather phase p=0,
+    scatter phase p=1; A streamed twice per round, as in the two-kernel
+    baseline, but z/r/g/δ never leave VMEM)."""
+    single = T == 1
+
+    def kernel(idx_ref, scal_ref, a_ref, z0_ref, x0_ref, y_ref, m_ref,
+               zo_ref, xo_ref, f_ref, nnz_ref, z_s, r_s, x_s, g_s, d_s):
+        r_id = pl.program_id(0)
+        k_id = pl.program_id(1)
+        if single:
+            # One step = both phases for (round, block); predicates constant.
+            t_id = jnp.int32(0)
+            gather_on = scatter_on = jnp.bool_(True)
+            first_step = (r_id == 0) & (k_id == 0)
+        else:
+            p_id = pl.program_id(2)
+            t_id = pl.program_id(3)
+            gather_on = p_id == 0
+            scatter_on = p_id == 1
+            first_step = (r_id == 0) & (k_id == 0) & gather_on & (t_id == 0)
+        lam = scal_ref[0]
+        beta = scal_ref[1]
+
+        @pl.when(first_step)
+        def _init_launch():
+            z_s[...] = z0_ref[...]
+            x_s[...] = x0_ref[...]
+
+        @pl.when((k_id == 0) & gather_on & (t_id == 0))
+        def _round_start():
+            r_s[...] = _residual(z_s[...], y_ref[...], m_ref[...], loss)
+
+        a = a_ref[...].astype(jnp.float32)          # (tile_n, block)
+
+        @pl.when(gather_on)
+        def _gather_phase():
+            @pl.when(t_id == 0)
+            def _zero_g():
+                g_s[pl.ds(k_id, 1), :] = jnp.zeros((1, block), jnp.float32)
+
+            rt = r_s[pl.ds(t_id * tile_n, tile_n), :]   # (tile_n, 1)
+            contrib = jax.lax.dot_general(
+                a, rt, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)      # (block, 1)
+            g_s[pl.ds(k_id, 1), :] += contrib.reshape(1, block)
+
+            @pl.when(t_id == T - 1)
+            def _delta():
+                # All K deltas are taken from the *pre-round* x (scratch is
+                # only updated at round end), so duplicate block draws within
+                # a round reproduce Alg. 2's multiset semantics exactly.
+                b = idx_ref[r_id, k_id]
+                x_sel = x_s[pl.ds(b, 1), :]
+                g = g_s[pl.ds(k_id, 1), :]
+                x_new = _soft_threshold(x_sel - g / beta, lam / beta)
+                d_s[pl.ds(k_id, 1), :] = x_new - x_sel
+
+        @pl.when(scatter_on)
+        def _scatter_phase():
+            dlt = d_s[pl.ds(k_id, 1), :]                 # (1, block)
+            contrib = jax.lax.dot_general(
+                a, dlt, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)      # (tile_n, 1)
+            z_s[pl.ds(t_id * tile_n, tile_n), :] += contrib
+
+            @pl.when((k_id == K - 1) & (t_id == T - 1))
+            def _round_end():
+                def apply_delta(kk, carry):
+                    b = idx_ref[r_id, kk]
+                    x_s[pl.ds(b, 1), :] += d_s[pl.ds(kk, 1), :]
+                    return carry
+
+                jax.lax.fori_loop(0, K, apply_delta, 0)
+                f_ref[0, 0] = _round_objective(z_s[...], y_ref[...],
+                                               m_ref[...], x_s[...], lam, loss)
+                nnz_ref[0, 0] = jnp.sum((x_s[...] != 0).astype(jnp.int32))
+                # Constant-index outputs flush to HBM once, after the last
+                # grid step; rewriting them every round is free in VMEM.
+                zo_ref[...] = z_s[...]
+                xo_ref[...] = x_s[...]
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loss", "block", "tile_n", "interpret"))
+def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
+                         loss: str = LASSO, block: int = BLOCK,
+                         tile_n: int | None = None, interpret: bool = False):
+    """R Block-Shotgun rounds in ONE pallas_call.
+
+    A        (n, d) design, f32 or bf16 (bf16 halves streamed bytes; all
+             accumulation is f32 regardless).
+    z        (n,) margin A x;  x (d,) iterate;  y (n,);  mask (n,) sample
+             mask from ``ops.pad_problem``.
+    blk_idx  (R, K) int32 — round t updates aligned coordinate blocks
+             blk_idx[t, 0..K-1] (duplicates allowed, multiset semantics).
+
+    Returns (x_new (d,) f32, z_new (n,) f32, f (R,) f32, nnz (R,) int32)
+    with per-round objective/nnz traces computed in-kernel.
+    """
+    n, d = A.shape
+    R, K = blk_idx.shape
+    if tile_n is None:
+        tile_n = auto_tile_n(n, block, d=d)
+    assert d % block == 0 and n % tile_n == 0, (n, d, block, tile_n)
+    nblk = d // block
+    T = n // tile_n
+    single = T == 1
+
+    idx = blk_idx.astype(jnp.int32)
+    scal = jnp.stack([jnp.asarray(lam, jnp.float32),
+                      jnp.asarray(beta, jnp.float32)])
+    z0 = z.reshape(n, 1).astype(jnp.float32)
+    x0 = x.reshape(nblk, block).astype(jnp.float32)
+    y2 = y.reshape(n, 1).astype(jnp.float32)
+    m2 = mask.reshape(n, 1).astype(jnp.float32)
+
+    if single:
+        grid = (R, K)
+        a_map = lambda r, k, idx, scal: (0, idx[r, k])
+        const = lambda r, k, idx, scal: (0, 0)
+        f_map = lambda r, k, idx, scal: (r, 0)
+    else:
+        grid = (R, K, 2, T)
+        a_map = lambda r, k, p, t, idx, scal: (t, idx[r, k])
+        const = lambda r, k, p, t, idx, scal: (0, 0)
+        f_map = lambda r, k, p, t, idx, scal: (r, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, block), a_map),   # streamed A block
+            pl.BlockSpec((n, 1), const),            # z0   (VMEM-resident)
+            pl.BlockSpec((nblk, block), const),     # x0   (VMEM-resident)
+            pl.BlockSpec((n, 1), const),            # y    (VMEM-resident)
+            pl.BlockSpec((n, 1), const),            # mask (VMEM-resident)
+        ],
+        out_specs=[
+            pl.BlockSpec((n, 1), const),
+            pl.BlockSpec((nblk, block), const),
+            pl.BlockSpec((1, 1), f_map),
+            pl.BlockSpec((1, 1), f_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),        # z  (margin)
+            pltpu.VMEM((n, 1), jnp.float32),        # r  (round-start residual)
+            pltpu.VMEM((nblk, block), jnp.float32),  # x
+            pltpu.VMEM((K, block), jnp.float32),    # g  accumulators
+            pltpu.VMEM((K, block), jnp.float32),    # delta
+        ],
+    )
+    z_new, x_new, f, nnz = pl.pallas_call(
+        _make_fused_kernel(loss, R, K, T, block, tile_n),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, block), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(idx, scal, A, z0, x0, y2, m2)
+    return (x_new.reshape(d), z_new.reshape(n), f.reshape(R), nnz.reshape(R))
+
+
+def auto_tile_n(n: int, block: int = BLOCK, d: int = 0,
+                vmem_budget: int = 12 * 2 ** 20):
+    """Largest sample tile that keeps the fused kernel's whole VMEM resident
+    set inside ``vmem_budget`` (leaving ~4 MB of the ~16 MB/core for
+    compiler slack): the double-buffered f32 A tile plus the z/r scratch and
+    y/mask/z0/zo vectors (6·n·4 B) and the three full-d x buffers
+    (x0/x_s/xo, 3·d·4 B).  Prefers tile_n == n (single-phase fused kernel,
+    one A fetch per block per round) whenever it fits.  See DESIGN §4.3."""
+    resident = 6 * n * 4 + 3 * d * 4
+    if 2 * n * block * 4 + resident <= vmem_budget:
+        return n
+    tile = max(TILE_N, block)
+    while n % tile:            # n is pre-padded to a TILE_N multiple by
+        tile //= 2             # ops.pad_problem, so this terminates >= 8
+    return tile

@@ -138,6 +138,10 @@ def param_specs(params, mesh: Mesh, policy: ShardingPolicy):
                 # drop axes that don't divide
                 spec = tuple(s if _divisible(leaf.shape[i], s, mesh) else None
                              for i, s in enumerate(spec))
+                # singleton tuple axes -> bare names (('data',) == 'data'
+                # semantically; bare is canonical for comparisons/printing)
+                spec = tuple(s[0] if isinstance(s, tuple) and len(s) == 1
+                             else s for s in spec)
                 return P(*spec)
         return P()   # default: replicated
 

@@ -8,6 +8,11 @@ import jax
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running multi-process / multi-device tests")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -125,7 +125,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.dist.collectives import hierarchical_psum
 
 mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
@@ -151,11 +151,11 @@ from repro.core.sharded import shotgun_sharded_solve, make_feature_mesh
 from repro.data import synthetic as syn
 A, y, _ = syn.sparco(seed=0, n=128, d=256)
 prob = obj.make_problem(A, y, lam=0.5)
-res = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), P_local=1, rounds=800)
+res = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), P_local=1, rounds=2000)
 f_end = float(res.trace.objective[-1])
 from repro.core.shotgun import shotgun_solve
 f_ref = float(shotgun_solve(prob, jax.random.PRNGKey(1), P=8,
-                            rounds=800).trace.objective[-1])
+                            rounds=2000).trace.objective[-1])
 assert abs(f_end - f_ref) / abs(f_ref) < 0.05, (f_end, f_ref)
 np.testing.assert_allclose(np.asarray(res.z), np.asarray(prob.A @ res.x),
                            rtol=2e-3, atol=2e-3)

@@ -11,6 +11,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based theory tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import objectives as obj
