@@ -1,0 +1,119 @@
+"""Distributed round-engine benchmark (DESIGN §3): per-round wall time of
+the scalar / block / fused engines × merge modes on a forced 8-device host
+mesh, plus the modeled Δz ``wire_bytes`` per round for each §7 compression
+scheme (the psum itself moves dense f32 in this SPMD emulation — the wire
+accounting is what a real multi-host deployment would put on the network).
+
+Engines run at matched effective parallelism (P_eff = shards × K × 128 for
+the block engines, P_local = K × 128 for the scalar engine).  Interpret-mode
+Pallas timings; the structural claims (1/R launches per merge, block DMA vs
+random column gather) carry to TPU.
+
+Appends its rows (tagged ``"bench": "sharded"``) to the repo-root
+``BENCH_kernels.json`` perf-trajectory artifact — full runs only; a
+BENCH_SMOKE=1 pass shrinks the shape and leaves the committed artifact
+alone.  Spawns its own subprocess so the forced device count never leaks
+into the caller's jax.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import REPO_ROOT, emit
+
+ROOT_NAME = "BENCH_kernels.json"
+
+SUB = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax, numpy as np
+from repro.core import objectives as obj
+from repro.core.sharded import make_feature_mesh, shotgun_sharded_solve
+from repro.data import synthetic as syn
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE_SUB", "0")))
+n, d, rounds = (512, 1024, 8) if SMOKE else (4096, 2048, 16)
+K, R_LAUNCH, SHARDS = 1, 8, 8
+
+A, y, _ = syn.sparse_imaging(seed=0, n=n, d=d, density=0.002)
+prob = obj.make_problem(A, y, lam=0.5)
+mesh = make_feature_mesh()
+
+
+def per_round_us(reps=3, **kw):
+    run = lambda: shotgun_sharded_solve(prob, jax.random.PRNGKey(0),
+                                        rounds=rounds, mesh=mesh, **kw)
+    jax.block_until_ready(run())              # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(run())
+    return (time.time() - t0) / reps / rounds * 1e6
+
+
+from repro.dist.compression import wire_bytes
+wire = {s: wire_bytes({"dz": np.zeros(n, np.float32)}, s, topk_frac=0.01)
+        for s in ("none", "int8", "topk")}
+
+rows = []
+for engine, ekw in [("scalar", dict(P_local=K * 128)),
+                    ("block", dict(engine="block", K=K)),
+                    ("fused", dict(engine="fused", K=K))]:
+    for merge, mkw in [("round", dict(trace_every=rounds)),
+                      ("launch", dict(rounds_per_launch=R_LAUNCH,
+                                      trace_every=rounds // R_LAUNCH))]:
+        us = per_round_us(merge=merge, **ekw, **mkw)
+        merge_rounds = 1 if merge == "round" else R_LAUNCH
+        rows.append({
+            "bench": "sharded", "n": n, "d": d, "shards": SHARDS,
+            "engine": engine, "merge": merge, "K": K,
+            "P_eff": K * 128 * SHARDS,
+            "round_us": round(us, 1),
+            "merges_per_round": 1.0 / merge_rounds,
+            "wire_bytes_per_round_none": wire["none"] / merge_rounds,
+            "wire_bytes_per_round_int8": wire["int8"] / merge_rounds,
+            "wire_bytes_per_round_topk": wire["topk"] / merge_rounds,
+        })
+        print(f"sharded,{engine},{merge},n={n},d={d},round_us={us:.0f}",
+              flush=True)
+
+by = {(r["engine"], r["merge"]): r["round_us"] for r in rows}
+speedup = by[("scalar", "round")] / by[("fused", "round")]
+for r in rows:
+    r["speedup_fused_round_vs_scalar_round"] = round(speedup, 2)
+print("RESULT_JSON " + json.dumps(rows))
+"""
+
+
+def run() -> list[dict]:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    src = str(REPO_ROOT / "src")
+    pypath = os.environ.get("PYTHONPATH", "")
+    env = {**os.environ,
+           "PYTHONPATH": src + (os.pathsep + pypath if pypath else ""),
+           "BENCH_SMOKE_SUB": "1" if smoke else "0"}
+    out = subprocess.run([sys.executable, "-c", SUB], capture_output=True,
+                         text=True, timeout=3600, env=env)
+    sys.stdout.write(out.stdout)
+    if out.returncode:
+        sys.stderr.write(out.stderr)
+        raise RuntimeError("bench_sharded subprocess failed")
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT_JSON ")]
+    rows = json.loads(line[-1][len("RESULT_JSON "):])
+
+    emit(rows, "bench_sharded")
+    if not smoke:
+        # append to the committed perf trajectory, replacing any previous
+        # sharded rows (bench_kernels owns the untagged rows)
+        root = REPO_ROOT / ROOT_NAME
+        hist = json.loads(root.read_text()) if root.exists() else []
+        hist = [r for r in hist if r.get("bench") != "sharded"] + rows
+        root.write_text(json.dumps(hist, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

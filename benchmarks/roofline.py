@@ -46,6 +46,38 @@ def shotgun_round_model(n, d, K, block=128, a_bytes=4, fused_single=None):
     return rows
 
 
+def sharded_merge_model(n, merge_rounds=1, scheme="none", topk_frac=0.01,
+                        inner=1):
+    """Per-round wire bytes of the distributed solver's Δz merge (DESIGN
+    §3/§7): one n-vector all-reduce per ``merge_rounds`` rounds, optionally
+    compressed (``dist.compression.wire_bytes`` accounting) and/or
+    hierarchical (the slow inter-pod hop carries 1/``inner`` of the bytes).
+    """
+    import numpy as np
+    from repro.dist.compression import wire_bytes
+    per_merge = wire_bytes({"dz": np.zeros(n, np.float32)}, scheme,
+                           topk_frac=topk_frac)
+    return {
+        "wire_bytes_per_merge": per_merge,
+        "wire_bytes_per_round": per_merge / merge_rounds,
+        "slow_hop_bytes_per_round": per_merge / merge_rounds / inner,
+    }
+
+
+def sharded_wire_table(n=2048, schemes=("none", "int8", "topk")):
+    out = [f"{'scheme':8s} {'merge':>6s} {'B/merge':>10s} {'B/round':>10s} "
+           f"{'slow hop/round (inner=4)':>24s}"]
+    for scheme in schemes:
+        for merge_rounds in (1, 8):
+            m = sharded_merge_model(n, merge_rounds, scheme, topk_frac=0.01,
+                                    inner=4)
+            out.append(f"{scheme:8s} {merge_rounds:6d} "
+                       f"{m['wire_bytes_per_merge']:10.0f} "
+                       f"{m['wire_bytes_per_round']:10.1f} "
+                       f"{m['slow_hop_bytes_per_round']:24.1f}")
+    return "\n".join(out)
+
+
 def shotgun_table(shapes=((1024, 2048, 4), (2048, 8192, 4))):
     out = [f"{'kernel':12s} {'n':>6s} {'d':>6s} {'K':>3s} {'GB/round':>10s} "
            f"{'flops/B':>8s} {'t_mem_us':>9s} {'bound':>7s}"]
@@ -89,6 +121,7 @@ def fmt_table(rows, mesh="single"):
 
 def run():
     print(shotgun_table(), flush=True)
+    print(sharded_wire_table(), flush=True)
     rows = load("final")
     for mesh in ("single", "multi"):
         n_ok = sum(1 for r in rows if r.get("mesh") == mesh and r["status"] == "ok")

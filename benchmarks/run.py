@@ -13,7 +13,7 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, fig2_parallelism,
+    from benchmarks import (bench_kernels, bench_sharded, fig2_parallelism,
                             fig3_lasso_solvers, fig4_logreg, fig5_speedup,
                             roofline, shotgun_scale)
     ALL = {
@@ -22,6 +22,7 @@ def main() -> None:
         "fig4": fig4_logreg.run,
         "fig5": fig5_speedup.run,
         "kernels": bench_kernels.run,
+        "sharded": bench_sharded.run,
         "shotgun_scale": shotgun_scale.run,
         "roofline": roofline.run,
     }

@@ -1,0 +1,153 @@
+"""Per-shard round engines for the distributed solver (DESIGN §3).
+
+The distributed Shotgun driver (``core/sharded.py``) is a thin shard_map
+loop over a pluggable **round engine**: the per-shard computation "run R
+rounds of coordinate updates against a margin snapshot z, emit the margin
+contribution Δz = A_shard δx" behind one small protocol, so the same driver
+composes the scalar jnp path, the two-kernel Pallas path, and the fused
+multi-round Pallas kernel (DESIGN §4.2) with either merge cadence.
+
+Protocol (all engines are hashable NamedTuples so they can ride through
+``jax.jit`` as static configuration; the driver owns iterate init,
+padding, and the Δz merge):
+
+  ``engine.run(A_blk, y, mask, lam, beta, z, x_l, keys) -> (x_l, dz)``
+      run ``keys.shape[0]`` rounds.  ``z`` is the last *merged* global
+      margin; the engine sees its own updates immediately (its live view is
+      ``z + dz_partial``) and other shards' updates only at the next merge —
+      with ``merge="round"`` the driver merges after every round, so there
+      is no staleness; with ``merge="launch"`` the engine runs R stale
+      rounds per merge (the paper's interference story, Lemma 3.3, as an
+      explicit knob).  ``keys`` are already shard-decorrelated by the
+      driver.
+
+  ``engine.fold_always``
+      scalar engine: True — the per-round key is folded with the shard
+      index even on a 1-shard mesh, preserving the pre-engine trajectory
+      bit-for-bit.  Block/fused engines fold only on real multi-shard
+      meshes so a 1-shard run draws *exactly* the same block indices as the
+      single-device solvers in ``kernels/ops.py`` (trace-equivalence,
+      DESIGN §3).
+
+Engines never touch collectives — the driver owns the Δz merge (psum /
+hierarchical psum / compressed, DESIGN §7).  Pallas imports stay inside
+method bodies so ``repro.core`` remains import-light.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import objectives as obj
+
+ENGINE_NAMES = ("scalar", "block", "fused")
+
+
+class ScalarEngine(NamedTuple):
+    """The original per-coordinate jnp engine (trajectory-preserving).
+
+    Each round samples ``P_local`` coordinates of the shard (with
+    replacement) and applies the Shooting update against the current local
+    margin view — exactly the pre-refactor ``round_fn`` of
+    ``core/sharded.py``.
+    """
+
+    P_local: int
+    loss: str
+
+    fold_always = True
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+        d_local = x_l.shape[0]
+
+        def round_fn(carry, key_t):
+            x_l, dz = carry
+            idx = jax.random.randint(key_t, (self.P_local,), 0, d_local)
+            r = obj.residual_like(z + dz, y, self.loss) * mask
+            Ap = A_blk[:, idx]
+            g = Ap.T @ r
+            delta = obj.shooting_delta(x_l[idx], g, lam, beta)
+            x_l = x_l.at[idx].add(delta)
+            dz = dz + Ap @ delta
+            return (x_l, dz), None
+
+        (x_l, dz), _ = jax.lax.scan(round_fn, (x_l, jnp.zeros_like(z)), keys)
+        return x_l, dz
+
+
+class BlockEngine(NamedTuple):
+    """Two-kernel Pallas engine: K aligned 128-blocks per round
+    (``gather_block_matvec`` + ``scatter_block_update``, DESIGN §4.1), with
+    the scatter accumulating into the Δz buffer instead of the margin."""
+
+    K: int
+    loss: str
+    block: int = 128
+    interpret: bool = True
+
+    fold_always = False
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+        from repro.kernels.shotgun_block import (gather_block_matvec,
+                                                 scatter_block_update)
+        nblk = x_l.shape[0] // self.block
+
+        def round_fn(carry, key_t):
+            x_l, dz = carry
+            blk = jax.random.choice(key_t, nblk, (self.K,),
+                                    replace=False).astype(jnp.int32)
+            r = obj.residual_like(z + dz, y, self.loss) * mask
+            g = gather_block_matvec(A_blk, r, blk, block=self.block,
+                                    interpret=self.interpret)
+            xb = x_l.reshape(nblk, self.block)
+            x_sel = jnp.take(xb, blk, axis=0)
+            x_new = obj.soft_threshold(x_sel - g / beta, lam / beta)
+            delta = x_new - x_sel
+            dz = scatter_block_update(A_blk, dz, blk, delta,
+                                      block=self.block,
+                                      interpret=self.interpret)
+            x_l = xb.at[blk].add(delta).reshape(-1)
+            return (x_l, dz), None
+
+        (x_l, dz), _ = jax.lax.scan(round_fn, (x_l, jnp.zeros_like(z)), keys)
+        return x_l, dz
+
+
+class FusedEngine(NamedTuple):
+    """Fused multi-round Pallas engine: all R rounds of a merge window in
+    ONE ``pallas_call`` with the local margin view and Δz accumulator
+    resident in VMEM (``fused_shotgun_delta_rounds``, DESIGN §4.2)."""
+
+    K: int
+    loss: str
+    block: int = 128
+    tile_n: int | None = None     # resolved to a static int by the driver
+    interpret: bool = True
+
+    fold_always = False
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+        from repro.kernels.shotgun_block import fused_shotgun_delta_rounds
+        nblk = x_l.shape[0] // self.block
+        draw = lambda kt: jax.random.choice(kt, nblk, (self.K,),
+                                            replace=False)
+        idx = jax.vmap(draw)(keys).astype(jnp.int32)
+        return fused_shotgun_delta_rounds(
+            A_blk, z, x_l, idx, lam, beta, y, mask, loss=self.loss,
+            block=self.block, tile_n=self.tile_n, interpret=self.interpret)
+
+
+def make_engine(name: str, *, loss: str, P_local: int = 8, K: int = 2,
+                block: int = 128, tile_n: int | None = None,
+                interpret: bool = True):
+    """Engine registry: build a ``RoundEngine`` by name (``ENGINE_NAMES``)."""
+    if name == "scalar":
+        return ScalarEngine(P_local=P_local, loss=loss)
+    if name == "block":
+        return BlockEngine(K=K, loss=loss, block=block, interpret=interpret)
+    if name == "fused":
+        return FusedEngine(K=K, loss=loss, block=block, tile_n=tile_n,
+                           interpret=interpret)
+    raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_NAMES}")

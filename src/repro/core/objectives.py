@@ -89,6 +89,18 @@ def data_loss_from_margin(z: jax.Array, y: jax.Array, loss: str) -> jax.Array:
     return jnp.sum(jnp.logaddexp(0.0, m))
 
 
+def masked_data_loss(z: jax.Array, y: jax.Array, mask: jax.Array,
+                     loss: str) -> jax.Array:
+    """Data loss restricted to real samples (``mask`` zeros out the rows
+    ``kernels.ops.pad_problem`` added).  The Pallas kernels keep their own
+    import-independent copy of this formula
+    (``shotgun_block._round_objective``) — keep the two in sync."""
+    if loss == LASSO:
+        e = z - y
+        return 0.5 * jnp.sum(e * (e * mask))
+    return jnp.sum(mask * jnp.logaddexp(0.0, -y * z))
+
+
 def objective_from_margin(z, x, prob: Problem) -> jax.Array:
     return data_loss_from_margin(z, prob.y, prob.loss) + prob.lam * jnp.sum(jnp.abs(x))
 

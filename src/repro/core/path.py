@@ -4,6 +4,11 @@ Rather than solving directly at the target lambda, solve along an
 exponentially decreasing sequence lam_1 > lam_2 > ... > lam_target,
 warm-starting each solve from the previous solution.  lam_1 is chosen
 just below lambda_max = ||A^T dL/dz(0)||_inf (above which x* = 0).
+
+``solve_path`` runs on any ``SOLVER_NAMES`` entry (``core.get_solver``):
+pass ``solver="block_fused"`` / ``"sharded"`` / ... and the per-λ solves
+ride the Pallas or distributed paths, warm-started through their ``x0``
+support.
 """
 from __future__ import annotations
 
@@ -34,14 +39,79 @@ def lambda_sequence(lam_max: float, lam_target: float, num: int = 10) -> np.ndar
     return np.geomspace(start, lam_target, num)
 
 
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _solver_by_name(name: str, **solver_kwargs) -> Callable:
+    """Adapt any ``SOLVER_NAMES`` entry to the uniform path signature
+    ``(prob, key, P, rounds, x0) -> Result`` (warm start threaded through).
+
+    ``P`` maps onto each family's parallelism knob: the per-round update
+    count for the scalar solvers, K = ceil(P / 128) blocks for the Pallas
+    solvers, and P_local for the sharded driver.  ``solver_kwargs`` pass
+    through (e.g. ``interpret=``, ``engine=``, ``mesh=``).
+    """
+    solve = shotgun.get_solver(name)
+
+    if name in ("shooting", "shooting_cdn"):
+        return lambda p, k, P, r, x0: solve(p, k, rounds=r, x0=x0,
+                                            **solver_kwargs)
+    if name in ("shotgun", "shotgun_cdn"):
+        return lambda p, k, P, r, x0: solve(p, k, P=P, rounds=r, x0=x0,
+                                            **solver_kwargs)
+    if name == "shotgun_dup":
+        def run_dup(p, k, P, r, x0):
+            dp = obj.dup_from(p)
+            xhat0 = (None if x0 is None else
+                     jnp.concatenate([jnp.maximum(x0, 0.0),
+                                      jnp.maximum(-x0, 0.0)]))
+            res = solve(dp, k, P=P, rounds=r, xhat0=xhat0, **solver_kwargs)
+            return res._replace(x=obj.dup_to_signed(res.x))
+        return run_dup
+    if name in ("block", "block_fused"):
+        def run_block(p, k, P, r, x0):
+            from repro.kernels.shotgun_block import BLOCK
+            kw = dict(solver_kwargs)
+            K = kw.pop("K", max(1, -(-P // BLOCK)))
+            if name == "block_fused" and "rounds_per_launch" not in kw:
+                kw["rounds_per_launch"] = _largest_divisor_leq(r, 8)
+            return solve(p, k, K=K, rounds=r, x0=x0, **kw)
+        return run_block
+    if name == "sharded":
+        def run_sharded(p, k, P, r, x0):
+            kw = dict(solver_kwargs)
+            if kw.get("engine") in ("block", "fused"):
+                # block engines take their parallelism as K blocks of 128
+                # per shard, not P_local
+                from repro.kernels.shotgun_block import BLOCK
+                kw.setdefault("K", max(1, -(-P // BLOCK)))
+            return solve(p, k, P_local=P, rounds=r, x0=x0, **kw)
+        return run_sharded
+    raise ValueError(f"no path adapter for solver {name!r}")
+
+
 def solve_path(prob: obj.Problem, key: jax.Array, lam_target: float,
                P: int = 8, rounds_per_lambda: int = 200, num_lambdas: int = 10,
-               solver: Callable | None = None) -> PathResult:
-    """Warm-started lambda-continuation wrapper around any shotgun-like solver.
+               solver: str | Callable | None = None,
+               **solver_kwargs) -> PathResult:
+    """Warm-started lambda-continuation wrapper around any shotgun-family
+    solver.
 
-    ``solver(prob, key, P, rounds, x0) -> shotgun.Result``
+    ``solver`` is a ``SOLVER_NAMES`` entry (adapted automatically, warm
+    starts included) or a callable
+    ``solver(prob, key, P, rounds, x0) -> shotgun.Result``.
     """
-    if solver is None:
+    if isinstance(solver, str):
+        solver = _solver_by_name(solver, **solver_kwargs)
+    elif solver_kwargs:
+        raise ValueError(
+            f"solver_kwargs {sorted(solver_kwargs)} are only forwarded when "
+            f"``solver`` is a registry name; got solver={solver!r}")
+    elif solver is None:
         solver = lambda p, k, P, rounds, x0: shotgun.shotgun_solve(p, k, P=P, rounds=rounds, x0=x0)
     lmax = float(obj.lambda_max(prob.A, prob.y, prob.loss))
     lams = lambda_sequence(lmax, lam_target, num_lambdas)

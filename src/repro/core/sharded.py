@@ -1,36 +1,60 @@
-"""Distributed Shotgun via shard_map: the multi-pod adaptation (DESIGN §3).
+"""Distributed Shotgun via shard_map: a thin driver over round engines
+(DESIGN §3).
 
 The paper's multicore implementation shares one ``Ax`` vector through atomic
 compare-and-swap.  On an SPMD mesh there is no shared memory; instead:
 
-  * columns of A (features) are sharded over the mesh's devices — axis "f"
-    (the flattened (pod, data, model) production mesh or any 1-D mesh),
-  * every device holds the full residual/margin ``z`` (n,), replicated,
-  * each round, device k samples P_local coordinates from its local shard,
-    computes Shooting updates against the shared ``z``, and contributes
-    Δz_k = A_localᵦ δx_k;  one ``psum`` merges all contributions.
+  * columns of A (features) are sharded over the mesh's devices — over ALL
+    mesh axes flattened, so both a 1-D ``("f",)`` mesh and a production
+    ``(pod, f)`` mesh work,
+  * every device holds the full margin ``z`` (n,), replicated,
+  * each merge window, device k runs a **round engine** (``core/engines.py``:
+    scalar jnp / two-kernel Pallas / fused multi-round Pallas) for R rounds
+    against the last merged ``z`` and emits Δz_k = A_k δx_k,
+  * one all-reduce merges the contributions — the shared-Ax write.
 
-This is *exactly* Alg. 2 with P = P_local × num_devices parallel updates
-(sampling is without replacement across devices by construction — devices
-own disjoint coordinate sets — which only reduces the interference term of
-Lemma 3.3, so Thm 3.2's bound still applies).
+Two merge cadences:
 
-The collective cost is one all-reduce of an n-vector per round, independent
-of P — the analogue the roofline analysis in EXPERIMENTS.md tracks.
+  ``merge="round"``    R = 1: one psum per round.  No staleness — this is
+                       exactly Alg. 2 with P = P_shard × num_devices
+                       (devices own disjoint coordinates, which only shrinks
+                       Lemma 3.3's interference term), and for the fused
+                       engine on a 1-shard mesh it is trace-equivalent to
+                       ``block_shotgun_solve(fused=True)``.
+  ``merge="launch"``   R = rounds_per_launch stale rounds per merge: each
+                       shard sees its own updates immediately but other
+                       shards' only at merge boundaries — the paper's
+                       interference/staleness trade-off (Lemma 3.3) as an
+                       explicit knob, paying 1/R of the collective traffic.
+
+The Δz all-reduce optionally routes through the §7 wire layer: int8/top-k
+compression with error feedback (``dist/compression.py``; the psum carries
+the receiver-side dense reconstruction, ``wire_bytes`` does the byte
+accounting surfaced by ``benchmarks/roofline.py``) and/or
+``dist/collectives.hierarchical_psum`` on a 2-D (outer, inner) mesh so the
+slow inter-pod hop carries 1/inner of the bytes.
+
+``trace_every`` thins the objective bookkeeping (2 scalar psums) out of the
+hot loop; it counts *merges*, so the trace length is
+``rounds // merge_rounds // trace_every`` and the update trajectory is
+unchanged by thinning.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core import objectives as obj
+from repro.core.engines import ENGINE_NAMES, ScalarEngine, make_engine
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
+
+MERGE_MODES = ("round", "launch")
+COMPRESSION_SCHEMES = ("none", "int8", "topk")
 
 
 def pad_features(A: jax.Array, num_shards: int) -> jax.Array:
@@ -52,70 +76,174 @@ def make_feature_mesh(devices=None) -> Mesh:
     return Mesh(np.array(devices), ("f",))
 
 
-@functools.partial(jax.jit, static_argnames=("P_local", "rounds", "mesh",
-                                              "loss", "trace_every"))
-def _sharded_solve(A, y, lam, beta, key, P_local: int, rounds: int,
-                   mesh: Mesh, loss: str, trace_every: int = 1) -> Result:
+def _compress_dz(dz, ef, scheme: str, topk_frac: float):
+    """One §7 wire step for the Δz merge: returns (wire, ef_new) where wire
+    is the receiver-side dense reconstruction of ``dz + ef`` and ef_new the
+    error-feedback residual of what the scheme dropped."""
+    from repro.dist import compression as C
+    wire, ef_new = C.compress_grads({"dz": dz}, {"dz": ef}, scheme=scheme,
+                                    topk_frac=topk_frac)
+    return wire["dz"], ef_new["dz"]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "engine", "rounds", "merge_rounds", "mesh", "trace_every",
+    "compression", "topk_frac", "hierarchical"))
+def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
+                  merge_rounds: int, mesh: Mesh, trace_every: int,
+                  compression: str = "none", topk_frac: float = 0.01,
+                  hierarchical: bool = False) -> Result:
+    """shard_map driver over a RoundEngine on the (pre-padded) problem."""
     n, d = A.shape
+    axes = tuple(mesh.axis_names)
     nshards = mesh.devices.size
-    d_local = d // nshards
-    assert rounds % trace_every == 0
+    if rounds % merge_rounds:
+        raise ValueError(
+            f"rounds={rounds} not divisible by merge_rounds={merge_rounds}")
+    n_merges = rounds // merge_rounds
+    if n_merges % trace_every:
+        raise ValueError(
+            f"number of merges {n_merges} (= rounds {rounds} / merge_rounds "
+            f"{merge_rounds}) not divisible by trace_every={trace_every}")
+    if hierarchical:
+        if len(axes) < 2:
+            raise ValueError(
+                f"hierarchical=True needs a 2-D (outer, inner) mesh, got "
+                f"axes {axes}")
+        inner = 1
+        for ax in axes[1:]:
+            inner *= mesh.shape[ax]
+        if n % inner:
+            raise ValueError(
+                f"n={n} not divisible by inner mesh size {inner} "
+                f"(hierarchical reduce-scatter)")
 
-    def solve_local(A_blk, y_rep, key_blk):
-        # A_blk: (n, d_local) this device's feature shard; y replicated.
-        me = jax.lax.axis_index("f")
-        x_blk = jnp.zeros(d_local, A_blk.dtype)
-        z = A_blk @ x_blk
-        z = jax.lax.psum(z, "f")              # = A x = 0 initially
+    def solve_local(A_blk, y_rep, m_rep, x0_blk, key_rep):
+        me = jnp.int32(0)
+        for ax in axes:                      # flattened shard index
+            me = me * mesh.shape[ax] + jax.lax.axis_index(ax)
+        z = jax.lax.psum(A_blk @ x0_blk, axes)     # global margin of x0
+        ef = jnp.zeros(n, jnp.float32)             # §7 error feedback
 
-        def round_fn(carry, key_t):
-            x_l, z = carry
-            key_t = jax.random.fold_in(key_t, me)    # decorrelate shards
-            idx = jax.random.randint(key_t, (P_local,), 0, d_local)
-            r = obj.residual_like(z, y_rep, loss)
-            Ap = A_blk[:, idx]
-            g = Ap.T @ r
-            delta = obj.shooting_delta(x_l[idx], g, lam, beta)
-            x_l = x_l.at[idx].add(delta)
-            dz = Ap @ delta
-            z = z + jax.lax.psum(dz, "f")     # the paper's shared-Ax write
-            return (x_l, z), None
+        def merge_fn(carry, keys_m):
+            x_l, z, ef = carry
+            if engine.fold_always or nshards > 1:  # decorrelate shards
+                keys_m = jax.vmap(
+                    lambda kt: jax.random.fold_in(kt, me))(keys_m)
+            x_l, dz = engine.run(A_blk, y_rep, m_rep, lam, beta, z, x_l,
+                                 keys_m)
+            if compression != "none":
+                dz, ef = _compress_dz(dz, ef, compression, topk_frac)
+            if hierarchical:
+                from repro.dist.collectives import hierarchical_psum
+                dz_g = hierarchical_psum(dz, axes[0], axes[1:])
+            else:
+                dz_g = jax.lax.psum(dz, axes)
+            return (x_l, z + dz_g, ef), None
 
-        def outer_fn(carry, keys_k):
-            # trace_every rounds without objective bookkeeping, then one
+        def outer_fn(carry, keys_o):
+            # trace_every merges without objective bookkeeping, then one
             # F(x)/nnz evaluation (2 scalar psums) — the bookkeeping psums
-            # cost as much wire as the dz psum itself when traced per round
-            carry, _ = jax.lax.scan(round_fn, carry, keys_k)
-            x_l, z = carry
-            f_data = obj.data_loss_from_margin(z, y_rep, loss)
-            f_reg = lam * jax.lax.psum(jnp.sum(jnp.abs(x_l)), "f")
-            nnz = jax.lax.psum(jnp.sum(x_l != 0), "f")
+            # cost as much wire as the dz psum itself when traced per merge
+            carry, _ = jax.lax.scan(merge_fn, carry, keys_o)
+            x_l, z, _ = carry
+            f_data = obj.masked_data_loss(z, y_rep, m_rep, engine.loss)
+            f_reg = lam * jax.lax.psum(jnp.sum(jnp.abs(x_l)), axes)
+            nnz = jax.lax.psum(jnp.sum(x_l != 0), axes)
             return carry, (f_data + f_reg, nnz)
 
-        keys = jax.random.split(key_blk, rounds)
-        keys = keys.reshape(rounds // trace_every, trace_every, -1)
-        (x_l, z), (fs, nnzs) = jax.lax.scan(outer_fn, (x_blk, z), keys)
+        keys = jax.random.split(key_rep, rounds)
+        keys = keys.reshape(n_merges // trace_every, trace_every,
+                            merge_rounds, -1)
+        x0_l = x0_blk.astype(jnp.float32)
+        (x_l, z, _), (fs, nnzs) = jax.lax.scan(outer_fn, (x0_l, z, ef), keys)
         return x_l, z, fs, nnzs
 
     solve = shard_map(
         solve_local, mesh=mesh,
-        in_specs=(P(None, "f"), P(None), P(None)),
-        out_specs=(P("f"), P(None), P(None), P(None)),
+        in_specs=(P(None, axes), P(None), P(None), P(axes), P(None)),
+        out_specs=(P(axes), P(None), P(None), P(None)),
         check_vma=False,
     )
-    x, z, fs, nnzs = solve(A, y, key)
+    x, z, fs, nnzs = solve(A, y, mask, x0, key)
     return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
 
 
-def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int,
-                          rounds: int, mesh: Mesh | None = None,
-                          trace_every: int = 1) -> Result:
-    """Distributed Shotgun.  Total parallelism P = P_local * mesh size.
+# Legacy entry point, kept positional-compatible for benchmarks
+# (``benchmarks/shotgun_scale.py`` lowers it against ShapeDtypeStructs).
+def _sharded_solve(A, y, lam, beta, key, P_local: int, rounds: int,
+                   mesh: Mesh, loss: str, trace_every: int = 1) -> Result:
+    n, d = A.shape
+    engine = ScalarEngine(P_local=P_local, loss=loss)
+    ones = jnp.ones(n, jnp.float32)
+    x0 = jnp.zeros(d, jnp.float32)
+    return _engine_solve(A, y, ones, x0, lam, beta, key, engine=engine,
+                         rounds=rounds, merge_rounds=1, mesh=mesh,
+                         trace_every=trace_every)
 
-    ``trace_every`` thins the objective bookkeeping (trace length becomes
-    rounds // trace_every) — the update trajectory is unchanged."""
+
+def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
+                          rounds: int = 500, mesh: Mesh | None = None,
+                          trace_every: int = 1, *, engine: str = "scalar",
+                          merge: str = "round", rounds_per_launch: int = 8,
+                          K: int = 2, tile_n: int | None = None,
+                          x0: jax.Array | None = None,
+                          compression: str = "none", topk_frac: float = 0.01,
+                          hierarchical: bool = False,
+                          interpret: bool = True) -> Result:
+    """Distributed Shotgun over any round engine (DESIGN §3).
+
+    engine      "scalar" (P = P_local × shards coordinate updates/round),
+                "block" / "fused" (P = K × 128 × shards via the Pallas
+                kernels; ``interpret=True`` on CPU).
+    merge       "round" — one Δz psum per round (no staleness);
+                "launch" — ``rounds_per_launch`` stale rounds per merge.
+    x0          optional warm start (λ-continuation); zero-padded and
+                sharded, with z initialized to the psum of A x0.
+    compression "none" | "int8" | "topk": Δz merges route through the §7
+                wire layer with error feedback.
+    hierarchical  on a 2-D (outer, inner) mesh, merge Δz via
+                reduce-scatter(inner) → psum(outer) → all-gather(inner).
+
+    The trace has one (objective, nnz) point per ``trace_every`` merges.
+    """
+    if engine not in ENGINE_NAMES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINE_NAMES}")
+    if merge not in MERGE_MODES:
+        raise ValueError(f"unknown merge {merge!r}; choose from {MERGE_MODES}")
+    if compression not in COMPRESSION_SCHEMES:
+        raise ValueError(f"unknown compression {compression!r}; choose from "
+                         f"{COMPRESSION_SCHEMES}")
     mesh = make_feature_mesh() if mesh is None else mesh
-    A = pad_features(prob.A, mesh.devices.size)
-    res = _sharded_solve(A, prob.y, prob.lam, prob.beta, key,
-                         P_local, rounds, mesh, prob.loss, trace_every)
-    return Result(x=res.x[: prob.d], z=res.z, trace=res.trace)
+    nshards = mesh.devices.size
+    merge_rounds = 1 if merge == "round" else rounds_per_launch
+
+    if engine == "scalar":
+        A, y = pad_features(prob.A, nshards), prob.y
+        mask = jnp.ones(prob.n, jnp.float32)
+        eng = make_engine(engine, loss=prob.loss, P_local=P_local)
+    else:
+        from repro.kernels import ops
+        from repro.kernels.shotgun_block import BLOCK, auto_tile_n
+        A, y, mask = ops.pad_problem(prob.A, prob.y)
+        A = pad_features(A, nshards * BLOCK)     # d_local must tile by 128
+        d_local = A.shape[1] // nshards
+        nblk_local = d_local // BLOCK
+        if K > nblk_local:
+            raise ValueError(
+                f"K={K} blocks > {nblk_local} local blocks "
+                f"(d_local={d_local}, block={BLOCK})")
+        if tile_n is None:
+            tile_n = auto_tile_n(A.shape[0], BLOCK, d=d_local)
+        mask = mask.astype(jnp.float32)
+        eng = make_engine(engine, loss=prob.loss, K=K, block=BLOCK,
+                          tile_n=tile_n, interpret=interpret)
+
+    x0 = (jnp.zeros(A.shape[1], jnp.float32) if x0 is None
+          else jnp.pad(jnp.asarray(x0, jnp.float32),
+                       (0, A.shape[1] - prob.d)))
+    res = _engine_solve(A, y, mask, x0, prob.lam, prob.beta, key, engine=eng,
+                        rounds=rounds, merge_rounds=merge_rounds, mesh=mesh,
+                        trace_every=trace_every, compression=compression,
+                        topk_frac=topk_frac, hierarchical=hierarchical)
+    return Result(x=res.x[: prob.d], z=res.z[: prob.n], trace=res.trace)

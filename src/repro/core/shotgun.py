@@ -138,10 +138,15 @@ def get_solver(name: str):
       shotgun_cdn / shooting_cdn         CDN inner-Newton variants
       block                              Pallas two-kernel Block-Shotgun
       block_fused                        fused multi-round Pallas kernel
-      sharded                            multi-device shard_map solver
+      sharded                            multi-device round-engine driver
+                                         (pick the per-shard kernel with
+                                         ``engine=`` from ``ENGINE_NAMES``,
+                                         DESIGN §3)
 
     Kernel/sharded solvers are imported lazily: ``repro.kernels.ops`` and
     ``repro.core.sharded`` both import this module at load time.
+    ``core.path.solve_path(solver=<name>)`` adapts any entry to the
+    λ-continuation loop, warm starts included.
     """
     if name == "shooting":
         return shooting_solve

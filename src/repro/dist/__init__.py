@@ -1,7 +1,9 @@
-"""Distributed-training plumbing: gradient compression + hierarchical
-collectives (DESIGN §7).  Kept separate from ``repro.core`` — the solvers
-only depend on ``jax.lax`` collectives; this package is the wire-format
-layer used by the LM training driver and the multi-pod benchmarks."""
+"""Distributed wire-format layer: gradient/Δz compression + hierarchical
+collectives (DESIGN §7).  Consumed by the LM training driver, the
+multi-pod benchmarks, AND the solver hot loop: ``core/sharded.py`` routes
+the round engines' Δz all-reduce through ``compress_grads`` (error
+feedback included) and ``hierarchical_psum`` (DESIGN §3.3).  Kept a
+separate package so ``repro.core`` imports it lazily."""
 from repro.dist.compression import (QuantInt8, TopK, quantize_int8,
                                     dequantize_int8, topk_compress,
                                     topk_decompress, ef_init, compress_grads,

@@ -64,11 +64,12 @@ def block_shotgun_round(A, z, x, blk_idx, lam, beta, y, mask,
 
 
 @functools.partial(jax.jit, static_argnames=("K", "rounds", "block", "loss", "interpret"))
-def _solve(A, y, mask, lam, beta, key, K, rounds, block, loss, interpret):
+def _solve(A, y, mask, lam, beta, key, K, rounds, block, loss, interpret,
+           x0=None):
     n, d = A.shape
     nblk = d // block
-    x0 = jnp.zeros(d, A.dtype)
-    z0 = jnp.zeros(n, A.dtype)
+    x0 = jnp.zeros(d, A.dtype) if x0 is None else x0.astype(A.dtype)
+    z0 = A @ x0                       # = 0 for the cold start
 
     def round_fn(carry, key_t):
         x, z = carry
@@ -76,11 +77,7 @@ def _solve(A, y, mask, lam, beta, key, K, rounds, block, loss, interpret):
         x, z, _ = block_shotgun_round(A, z, x, blk_idx, lam, beta, y, mask,
                                       loss=loss, block=block,
                                       interpret=interpret)
-        r = obj.residual_like(z, y, loss) * mask
-        if loss == obj.LASSO:
-            f = 0.5 * jnp.vdot(z - y, (z - y) * mask) + lam * jnp.sum(jnp.abs(x))
-        else:
-            f = jnp.sum(mask * jnp.logaddexp(0.0, -y * z)) + lam * jnp.sum(jnp.abs(x))
+        f = obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
         return (x, z), (f, jnp.sum(x != 0))
 
     keys = jax.random.split(key, rounds)
@@ -91,7 +88,7 @@ def _solve(A, y, mask, lam, beta, key, K, rounds, block, loss, interpret):
 @functools.partial(jax.jit, static_argnames=("K", "rounds", "R", "block",
                                              "tile_n", "loss", "interpret"))
 def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
-                 loss, interpret):
+                 loss, interpret, x0=None):
     """Scan over launches: one fused pallas_call per R rounds.
 
     Draws the same per-round keys/indices as ``_solve`` (jax.random.split of
@@ -100,8 +97,9 @@ def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
     n, d = A.shape
     nblk = d // block
     L = rounds // R
-    x0 = jnp.zeros(d, jnp.float32)
-    z0 = jnp.zeros(n, jnp.float32)
+    x0 = (jnp.zeros(d, jnp.float32) if x0 is None
+          else x0.astype(jnp.float32))
+    z0 = (A @ x0).astype(jnp.float32)  # = 0 for the cold start
     draw = functools.partial(jax.random.choice, a=nblk, shape=(K,),
                              replace=False)
 
@@ -123,7 +121,8 @@ def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
 def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
                         block: int = BLOCK, interpret: bool = True,
                         fused: bool = False, rounds_per_launch: int = 8,
-                        tile_n: int | None = None) -> Result:
+                        tile_n: int | None = None,
+                        x0: jax.Array | None = None) -> Result:
     """TPU-native Shotgun: K parallel blocks of `block` coordinates/round.
 
     Effective parallelism P = K * block must respect Thm 3.2's
@@ -132,8 +131,15 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
     ``fused=True`` runs ``rounds_per_launch`` rounds per kernel launch with
     the margin held in VMEM (must divide ``rounds``); the trajectory and
     trace are the same as the two-kernel path for the same key.
+
+    ``x0`` warm-starts the iterate (λ-continuation, ``core.path``): it is
+    zero-padded to the block-padded width and the margin is initialized to
+    ``z0 = A x0`` — padded columns carry zero weight so the trajectory of
+    real coordinates is unchanged.
     """
     A, y, mask = pad_problem(prob.A, prob.y)
+    if x0 is not None:
+        x0 = jnp.pad(jnp.asarray(x0), (0, A.shape[1] - prob.d))
     if fused:
         if rounds % rounds_per_launch:
             raise ValueError(
@@ -143,19 +149,20 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
             tile_n = auto_tile_n(A.shape[0], block, d=A.shape[1])
         res = _fused_solve(A, y, mask.astype(jnp.float32), prob.lam,
                            prob.beta, key, K, rounds, rounds_per_launch,
-                           block, tile_n, prob.loss, interpret)
+                           block, tile_n, prob.loss, interpret, x0=x0)
     else:
         res = _solve(A, y, mask, prob.lam, prob.beta, key, K, rounds, block,
-                     prob.loss, interpret)
-    return Result(x=res.x[: prob.d], z=res.z, trace=res.trace)
+                     prob.loss, interpret, x0=x0)
+    return Result(x=res.x[: prob.d], z=res.z[: prob.n], trace=res.trace)
 
 
 def fused_block_shotgun_solve(prob: Problem, key: jax.Array, K: int,
                               rounds: int, rounds_per_launch: int = 8,
                               block: int = BLOCK, tile_n: int | None = None,
-                              interpret: bool = True) -> Result:
+                              interpret: bool = True,
+                              x0: jax.Array | None = None) -> Result:
     """Convenience alias: ``block_shotgun_solve(..., fused=True)``."""
     return block_shotgun_solve(prob, key, K, rounds, block=block,
                                interpret=interpret, fused=True,
                                rounds_per_launch=rounds_per_launch,
-                               tile_n=tile_n)
+                               tile_n=tile_n, x0=x0)

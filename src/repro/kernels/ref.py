@@ -54,15 +54,21 @@ def fused_shotgun_rounds_ref(A, z, x, blk_idx, lam, beta, y, mask, loss,
         delta = x_new - x_sel
         z = scatter_block_update_ref(A32, z, idx_t, delta, block)
         x = xb.at[idx_t].add(delta).reshape(-1)
-        if loss == obj.LASSO:
-            f = 0.5 * jnp.vdot(z - y, (z - y) * mask) + lam * jnp.sum(jnp.abs(x))
-        else:
-            f = (jnp.sum(mask * jnp.logaddexp(0.0, -y * z))
-                 + lam * jnp.sum(jnp.abs(x)))
+        f = obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
         return (x, z), (f, jnp.sum(x != 0))
 
     (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x, z), blk_idx)
     return x, z, fs, nnzs.astype(jnp.int32)
+
+
+def fused_shotgun_delta_rounds_ref(A, z, x, blk_idx, lam, beta, y, mask,
+                                   loss, block: int):
+    """Oracle for ``shotgun_block.fused_shotgun_delta_rounds``: the same
+    multi-round trajectory, reported as (x_new, dz) with dz = z_new − z₀
+    (what the shard would contribute to the Δz all-reduce)."""
+    x_new, z_new, _, _ = fused_shotgun_rounds_ref(
+        A, z, x, blk_idx, lam, beta, y, mask, loss, block)
+    return x_new, z_new - z.astype(jnp.float32)
 
 
 def block_shotgun_round_ref(A, z, x, blk_idx, lam, beta, y, loss, block: int):

@@ -46,6 +46,15 @@ BLOCK = 128        # coordinate block width (MXU dimension)
 TILE_N = 512       # sample-dimension tile
 
 
+def _check_divisible(n: int, d: int, block: int, tile_n: int) -> None:
+    """Raise (don't assert — asserts vanish under ``python -O``) when the
+    operand shape doesn't tile: these kernels index A by whole blocks."""
+    if d % block:
+        raise ValueError(f"d={d} not divisible by block={block}")
+    if n % tile_n:
+        raise ValueError(f"n={n} not divisible by tile_n={tile_n}")
+
+
 # ---------------------------------------------------------------------------
 # Kernel 1: g[k] = A[:, blk_k*B:(blk_k+1)*B]^T r
 # ---------------------------------------------------------------------------
@@ -72,7 +81,7 @@ def gather_block_matvec(A, r, blk_idx, block: int = BLOCK,
                         tile_n: int = TILE_N, interpret: bool = False):
     """g (K, block) = per-selected-block column gradients A_Bᵀ r."""
     n, d = A.shape
-    assert d % block == 0 and n % tile_n == 0, (n, d, block, tile_n)
+    _check_divisible(n, d, block, tile_n)
     K = blk_idx.shape[0]
     T = n // tile_n
 
@@ -118,7 +127,7 @@ def scatter_block_update(A, z, blk_idx, delta, block: int = BLOCK,
                          tile_n: int = TILE_N, interpret: bool = False):
     """z_new = z + Σ_k A[:, blk_k] δ_k  — f32 accumulation, z.dtype out."""
     n, d = A.shape
-    assert d % block == 0 and n % tile_n == 0
+    _check_divisible(n, d, block, tile_n)
     K = blk_idx.shape[0]
     T = n // tile_n
 
@@ -171,15 +180,26 @@ def _round_objective(z, y, m, x, lam, loss: str):
 
 
 def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
-                       tile_n: int):
+                       tile_n: int, emit_dz: bool = False):
     """Kernel body factory.  grid = (R, K) when T == 1 (single-phase: each A
     block fetched once per round), else (R, K, 2, T) (gather phase p=0,
     scatter phase p=1; A streamed twice per round, as in the two-kernel
-    baseline, but z/r/g/δ never leave VMEM)."""
+    baseline, but z/r/g/δ never leave VMEM).
+
+    ``emit_dz`` selects the shard-local engine variant (DESIGN §3/§4.2): z0
+    is a read-only *global* margin snapshot; the kernel still keeps its own
+    live local view z_s = z0 + Σ own contributions in VMEM, but additionally
+    accumulates those contributions into a Δz scratch and outputs (Δz, x)
+    instead of (z, x, f, nnz) — the caller merges Δz across shards (psum)
+    and owns the trace bookkeeping."""
     single = T == 1
 
     def kernel(idx_ref, scal_ref, a_ref, z0_ref, x0_ref, y_ref, m_ref,
-               zo_ref, xo_ref, f_ref, nnz_ref, z_s, r_s, x_s, g_s, d_s):
+               *refs):
+        if emit_dz:
+            (dzo_ref, xo_ref, z_s, dz_s, r_s, x_s, g_s, d_s) = refs
+        else:
+            (zo_ref, xo_ref, f_ref, nnz_ref, z_s, r_s, x_s, g_s, d_s) = refs
         r_id = pl.program_id(0)
         k_id = pl.program_id(1)
         if single:
@@ -200,6 +220,8 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
         def _init_launch():
             z_s[...] = z0_ref[...]
             x_s[...] = x0_ref[...]
+            if emit_dz:
+                dz_s[...] = jnp.zeros_like(dz_s)
 
         @pl.when((k_id == 0) & gather_on & (t_id == 0))
         def _round_start():
@@ -237,6 +259,8 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
                 a, dlt, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32)      # (tile_n, 1)
             z_s[pl.ds(t_id * tile_n, tile_n), :] += contrib
+            if emit_dz:
+                dz_s[pl.ds(t_id * tile_n, tile_n), :] += contrib
 
             @pl.when((k_id == K - 1) & (t_id == T - 1))
             def _round_end():
@@ -246,39 +270,30 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
                     return carry
 
                 jax.lax.fori_loop(0, K, apply_delta, 0)
-                f_ref[0, 0] = _round_objective(z_s[...], y_ref[...],
-                                               m_ref[...], x_s[...], lam, loss)
-                nnz_ref[0, 0] = jnp.sum((x_s[...] != 0).astype(jnp.int32))
                 # Constant-index outputs flush to HBM once, after the last
                 # grid step; rewriting them every round is free in VMEM.
-                zo_ref[...] = z_s[...]
-                xo_ref[...] = x_s[...]
+                if emit_dz:
+                    dzo_ref[...] = dz_s[...]
+                    xo_ref[...] = x_s[...]
+                else:
+                    f_ref[0, 0] = _round_objective(z_s[...], y_ref[...],
+                                                   m_ref[...], x_s[...],
+                                                   lam, loss)
+                    nnz_ref[0, 0] = jnp.sum((x_s[...] != 0).astype(jnp.int32))
+                    zo_ref[...] = z_s[...]
+                    xo_ref[...] = x_s[...]
 
     return kernel
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("loss", "block", "tile_n", "interpret"))
-def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
-                         loss: str = LASSO, block: int = BLOCK,
-                         tile_n: int | None = None, interpret: bool = False):
-    """R Block-Shotgun rounds in ONE pallas_call.
-
-    A        (n, d) design, f32 or bf16 (bf16 halves streamed bytes; all
-             accumulation is f32 regardless).
-    z        (n,) margin A x;  x (d,) iterate;  y (n,);  mask (n,) sample
-             mask from ``ops.pad_problem``.
-    blk_idx  (R, K) int32 — round t updates aligned coordinate blocks
-             blk_idx[t, 0..K-1] (duplicates allowed, multiset semantics).
-
-    Returns (x_new (d,) f32, z_new (n,) f32, f (R,) f32, nnz (R,) int32)
-    with per-round objective/nnz traces computed in-kernel.
-    """
+def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
+                interpret, emit_dz):
+    """Shared pallas_call plumbing for both fused-kernel variants."""
     n, d = A.shape
     R, K = blk_idx.shape
     if tile_n is None:
         tile_n = auto_tile_n(n, block, d=d)
-    assert d % block == 0 and n % tile_n == 0, (n, d, block, tile_n)
+    _check_divisible(n, d, block, tile_n)
     nblk = d // block
     T = n // tile_n
     single = T == 1
@@ -302,6 +317,31 @@ def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
         const = lambda r, k, p, t, idx, scal: (0, 0)
         f_map = lambda r, k, p, t, idx, scal: (r, 0)
 
+    if emit_dz:
+        out_specs = [
+            pl.BlockSpec((n, 1), const),            # Δz
+            pl.BlockSpec((nblk, block), const),     # x
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, block), jnp.float32),
+        ]
+        extra_scratch = [pltpu.VMEM((n, 1), jnp.float32)]   # Δz accumulator
+    else:
+        out_specs = [
+            pl.BlockSpec((n, 1), const),            # z
+            pl.BlockSpec((nblk, block), const),     # x
+            pl.BlockSpec((1, 1), f_map),            # f trace
+            pl.BlockSpec((1, 1), f_map),            # nnz trace
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, block), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        ]
+        extra_scratch = []
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -312,32 +352,72 @@ def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
             pl.BlockSpec((n, 1), const),            # y    (VMEM-resident)
             pl.BlockSpec((n, 1), const),            # mask (VMEM-resident)
         ],
-        out_specs=[
-            pl.BlockSpec((n, 1), const),
-            pl.BlockSpec((nblk, block), const),
-            pl.BlockSpec((1, 1), f_map),
-            pl.BlockSpec((1, 1), f_map),
-        ],
+        out_specs=out_specs,
         scratch_shapes=[
-            pltpu.VMEM((n, 1), jnp.float32),        # z  (margin)
+            pltpu.VMEM((n, 1), jnp.float32),        # z  (live local view)
+        ] + extra_scratch + [
             pltpu.VMEM((n, 1), jnp.float32),        # r  (round-start residual)
             pltpu.VMEM((nblk, block), jnp.float32),  # x
             pltpu.VMEM((K, block), jnp.float32),    # g  accumulators
             pltpu.VMEM((K, block), jnp.float32),    # delta
         ],
     )
-    z_new, x_new, f, nnz = pl.pallas_call(
-        _make_fused_kernel(loss, R, K, T, block, tile_n),
+    return pl.pallas_call(
+        _make_fused_kernel(loss, R, K, T, block, tile_n, emit_dz=emit_dz),
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((n, 1), jnp.float32),
-            jax.ShapeDtypeStruct((nblk, block), jnp.float32),
-            jax.ShapeDtypeStruct((R, 1), jnp.float32),
-            jax.ShapeDtypeStruct((R, 1), jnp.int32),
-        ],
+        out_shape=out_shape,
         interpret=interpret,
     )(idx, scal, A, z0, x0, y2, m2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loss", "block", "tile_n", "interpret"))
+def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
+                         loss: str = LASSO, block: int = BLOCK,
+                         tile_n: int | None = None, interpret: bool = False):
+    """R Block-Shotgun rounds in ONE pallas_call.
+
+    A        (n, d) design, f32 or bf16 (bf16 halves streamed bytes; all
+             accumulation is f32 regardless).
+    z        (n,) margin A x;  x (d,) iterate;  y (n,);  mask (n,) sample
+             mask from ``ops.pad_problem``.
+    blk_idx  (R, K) int32 — round t updates aligned coordinate blocks
+             blk_idx[t, 0..K-1] (duplicates allowed, multiset semantics).
+
+    Returns (x_new (d,) f32, z_new (n,) f32, f (R,) f32, nnz (R,) int32)
+    with per-round objective/nnz traces computed in-kernel.
+    """
+    n, d = A.shape
+    R = blk_idx.shape[0]
+    z_new, x_new, f, nnz = _fused_call(A, z, x, blk_idx, lam, beta, y, mask,
+                                       loss, block, tile_n, interpret,
+                                       emit_dz=False)
     return (x_new.reshape(d), z_new.reshape(n), f.reshape(R), nnz.reshape(R))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loss", "block", "tile_n", "interpret"))
+def fused_shotgun_delta_rounds(A, z, x, blk_idx, lam, beta, y, mask,
+                               loss: str = LASSO, block: int = BLOCK,
+                               tile_n: int | None = None,
+                               interpret: bool = False):
+    """Shard-local fused engine kernel: R rounds against a margin *snapshot*.
+
+    Same dataflow as ``fused_shotgun_rounds`` — z/r/x/g/δ resident in VMEM,
+    streamed A blocks as the only per-round HBM traffic — but the kernel does
+    not own the global margin: ``z`` is the last merged global snapshot, the
+    kernel's live VMEM view tracks only its OWN updates on top of it, and the
+    contributions are additionally accumulated into a Δz = A_shard δx output
+    for the caller to all-reduce (DESIGN §3).  Within the launch the shard
+    sees its own rounds immediately; other shards' rounds arrive only at the
+    next merge — the staleness the ``merge="launch"`` mode trades off.
+
+    Returns (x_new (d,) f32, dz (n,) f32).
+    """
+    n, d = A.shape
+    dz, x_new = _fused_call(A, z, x, blk_idx, lam, beta, y, mask,
+                            loss, block, tile_n, interpret, emit_dz=True)
+    return x_new.reshape(d), dz.reshape(n)
 
 
 def auto_tile_n(n: int, block: int = BLOCK, d: int = 0,
