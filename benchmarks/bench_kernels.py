@@ -16,12 +16,11 @@ Env: BENCH_SMOKE=1 shrinks to the small shape only (CI smoke).
 from __future__ import annotations
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, merge_root, time_us
 from benchmarks.roofline import shotgun_round_model
 from repro.core import objectives as obj
 from repro.core.shotgun import shotgun_solve
@@ -31,14 +30,6 @@ from repro.kernels.shotgun_block import fused_shotgun_rounds
 
 ROUNDS_PER_LAUNCH = 8
 K = 4
-
-
-def _time(fn, reps=5):
-    fn()                       # warm
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn())
-    return (time.time() - t0) / reps * 1e6   # us
 
 
 def run() -> list[dict]:
@@ -57,14 +48,14 @@ def run() -> list[dict]:
         idx = (jnp.arange(R * K, dtype=jnp.int32).reshape(R, K)
                % (Ap.shape[1] // ops.BLOCK))
 
-        us_two = _time(lambda: ops.block_shotgun_round(
-            Ap, z, x, blk, prob.lam, prob.beta, yp, mask, interpret=True))
-        us_fused_launch = _time(lambda: fused_shotgun_rounds(
-            Ap, z, x, idx, prob.lam, prob.beta, yp, mask, interpret=True))
+        us_two = time_us(lambda: ops.block_shotgun_round(
+            Ap, z, x, blk, prob.lam, prob.beta, yp, mask, interpret=True), reps=5)
+        us_fused_launch = time_us(lambda: fused_shotgun_rounds(
+            Ap, z, x, idx, prob.lam, prob.beta, yp, mask, interpret=True), reps=5)
         us_fused = us_fused_launch / R
         # scalar Shotgun round with the same effective P = K*128
-        us_scalar = _time(lambda: shotgun_solve(
-            prob, jax.random.PRNGKey(0), P=K * ops.BLOCK, rounds=1))
+        us_scalar = time_us(lambda: shotgun_solve(
+            prob, jax.random.PRNGKey(0), P=K * ops.BLOCK, rounds=1), reps=5)
         model = shotgun_round_model(Ap.shape[0], Ap.shape[1], K,
                                     block=ops.BLOCK)
         rows.append({
@@ -85,10 +76,11 @@ def run() -> list[dict]:
         print(f"kernels,n={n},d={d},K={K},fused_round={us_fused:.0f}us,"
               f"block_round={us_two:.0f}us,scalar_round={us_scalar:.0f}us,"
               f"speedup={us_two / us_fused:.2f}x", flush=True)
-    # the repo-root trajectory point is reserved for full runs — a smoke
-    # pass must not clobber the committed two-shape artifact
-    root = None if os.environ.get("BENCH_SMOKE") else "BENCH_kernels.json"
-    return emit(rows, "bench_kernels", root_name=root)
+    emit(rows, "bench_kernels")
+    if not os.environ.get("BENCH_SMOKE"):
+        # full runs own the untagged rows of the committed perf trajectory
+        merge_root(rows, tag=None)
+    return rows
 
 
 if __name__ == "__main__":

@@ -22,9 +22,7 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import REPO_ROOT, emit
-
-ROOT_NAME = "BENCH_kernels.json"
+from benchmarks.common import REPO_ROOT, emit, merge_root
 
 SUB = r"""
 import os
@@ -108,10 +106,7 @@ def run() -> list[dict]:
     if not smoke:
         # append to the committed perf trajectory, replacing any previous
         # sharded rows (bench_kernels owns the untagged rows)
-        root = REPO_ROOT / ROOT_NAME
-        hist = json.loads(root.read_text()) if root.exists() else []
-        hist = [r for r in hist if r.get("bench") != "sharded"] + rows
-        root.write_text(json.dumps(hist, indent=1))
+        merge_root(rows, tag="sharded")
     return rows
 
 

@@ -1,0 +1,99 @@
+"""Dense vs blocked-CSC Shotgun benchmark (DESIGN §8): wall time and HBM
+traffic of the two data paths on the paper's Large-Sparse category at
+n=2048, d=16384, density=0.002 — the shape whose dense form is what makes
+``large_sparse`` memory-bound before the solver starts.
+
+Two comparisons per shape:
+
+  * scalar Shotgun round (P = K·128 sampled coordinates): dense column
+    gather A[:, idx] vs the O(tile·P) nnz-tile pack;
+  * two-kernel Pallas Block-Shotgun round: streamed (n × 128) dense blocks
+    vs the (tile × 128) rows/vals tiles of ``kernels/shotgun_sparse.py``.
+
+Interpret-mode timings (CPU container) — per the §4.4 cost model the
+interpret cost scales with the bytes each grid step touches, so the
+tile-vs-column ratio shows up directly; the analytic HBM model
+(``roofline.sparse_round_model``) carries the TPU claim.  Appends rows
+tagged ``"bench": "sparse"`` to the repo-root ``BENCH_kernels.json`` on
+full runs; BENCH_SMOKE=1 shrinks the shape and leaves the artifact alone.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, merge_root, time_us
+from benchmarks.roofline import sparse_round_model
+from repro.core import objectives as obj
+from repro.core.shotgun import shotgun_solve
+from repro.data import synthetic as syn
+from repro.kernels import ops
+
+K = 4
+
+
+def run() -> list[dict]:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    shapes = ([(256, 1024, 0.02)] if smoke
+              else [(2048, 16384, 0.002)])
+    rows = []
+    for (n, d, density) in shapes:
+        Ad, y, _ = syn.large_sparse(seed=0, n=n, d=d, density=density)
+        S, _, _ = syn.large_sparse(seed=0, n=n, d=d, density=density,
+                                   layout="bcsc")
+        pd = obj.make_problem(Ad, y, lam=0.5)
+        ps = obj.make_problem(S, y, lam=0.5)
+
+        # scalar solver: identical round math, different column gather
+        us_scalar_dense = time_us(lambda: shotgun_solve(
+            pd, jax.random.PRNGKey(0), P=K * 128, rounds=1))
+        us_scalar_sparse = time_us(lambda: shotgun_solve(
+            ps, jax.random.PRNGKey(0), P=K * 128, rounds=1))
+
+        # Pallas round: dense two-kernel vs sparse nnz-tile counterpart
+        Ap, yp, mask = ops.pad_problem(pd.A, pd.y)
+        x = jnp.zeros(Ap.shape[1])
+        z = jnp.zeros(Ap.shape[0])
+        blk = jnp.arange(K, dtype=jnp.int32)
+        us_blk_dense = time_us(lambda: ops.block_shotgun_round(
+            Ap, z, x, blk, pd.lam, pd.beta, yp, mask, interpret=True))
+
+        rows_t, vals_t = ps.A.rows, ps.A.vals
+        xs = jnp.zeros(rows_t.shape[0] * 128)
+        zs = jnp.zeros(n)
+        us_blk_sparse = time_us(lambda: ops.sparse_block_shotgun_round(
+            rows_t, vals_t, zs, xs, blk, ps.lam, ps.beta, ps.y,
+            interpret=True))
+
+        model = sparse_round_model(n, d, K, tile=ps.A.tile)
+        rows.append({
+            "bench": "sparse", "n": n, "d": d, "density": density,
+            "K": K, "P_eff": K * 128, "tile": int(ps.A.tile),
+            "scalar_round_us_dense": round(us_scalar_dense, 1),
+            "scalar_round_us_bcsc": round(us_scalar_sparse, 1),
+            "block_round_us_dense": round(us_blk_dense, 1),
+            "block_round_us_bcsc": round(us_blk_sparse, 1),
+            "speedup_scalar": round(us_scalar_dense / us_scalar_sparse, 2),
+            "speedup_block": round(us_blk_dense / us_blk_sparse, 2),
+            "hbm_bytes_per_round_dense": model["dense"]["bytes"],
+            "hbm_bytes_per_round_bcsc": model["sparse"]["bytes"],
+            "hbm_bytes_ratio": round(model["hbm_bytes_ratio"], 1),
+            "storage_bytes_dense": model["storage_bytes_dense"],
+            "storage_bytes_bcsc": model["storage_bytes_bcsc"],
+        })
+        print(f"sparse,n={n},d={d},density={density},tile={int(ps.A.tile)},"
+              f"scalar={us_scalar_dense:.0f}us->{us_scalar_sparse:.0f}us,"
+              f"block={us_blk_dense:.0f}us->{us_blk_sparse:.0f}us", flush=True)
+
+    emit(rows, "bench_sparse")
+    if not smoke:
+        # append to the committed perf trajectory, replacing any previous
+        # sparse rows (bench_kernels owns the untagged rows)
+        merge_root(rows, tag="sparse")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

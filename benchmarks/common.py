@@ -24,15 +24,29 @@ def timed(fn, *args, **kw):
     return out, time.time() - t0
 
 
-def emit(rows, name, root_name=None):
-    """Write rows (list of dicts) to results/<name>.json and echo CSV.
-
-    ``root_name`` additionally writes a repo-root copy (e.g.
-    ``BENCH_kernels.json``) — the committed perf-trajectory point that
-    successive PRs append to the history of."""
+def emit(rows, name):
+    """Write rows (list of dicts) to results/<name>.json and echo CSV."""
     RESULTS.mkdir(parents=True, exist_ok=True)
-    payload = json.dumps(rows, indent=1)
-    (RESULTS / f"{name}.json").write_text(payload)
-    if root_name:
-        (REPO_ROOT / root_name).write_text(payload)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
     return rows
+
+
+def merge_root(rows, tag, root_name="BENCH_kernels.json"):
+    """Merge ``rows`` into the committed repo-root perf-trajectory artifact,
+    replacing only the rows this bench owns: its ``"bench": tag`` rows, or
+    the untagged rows for ``tag=None`` (bench_kernels).  Full runs only —
+    callers skip this under BENCH_SMOKE."""
+    root = REPO_ROOT / root_name
+    hist = json.loads(root.read_text()) if root.exists() else []
+    hist = [r for r in hist if r.get("bench") != tag] + rows
+    root.write_text(json.dumps(hist, indent=1))
+    return rows
+
+
+def time_us(fn, reps=3):
+    """Mean wall time of ``fn`` in µs after one warm/compile call."""
+    fn()
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / reps * 1e6

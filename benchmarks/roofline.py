@@ -46,6 +46,29 @@ def shotgun_round_model(n, d, K, block=128, a_bytes=4, fused_single=None):
     return rows
 
 
+def sparse_round_model(n, d, K, tile, block=128):
+    """Per-round HBM bytes/flops of the two-kernel Block-Shotgun round on a
+    dense design vs a BlockedCSC one (DESIGN §8).  Sparse tiles carry both
+    int32 row indices and f32 values (8 B/slot); the dense round streams
+    whole (n × block) column blocks twice.  Also reports the at-rest
+    design-matrix footprint — the paper-scale constraint that motivates the
+    container.
+    """
+    dense = shotgun_round_model(n, d, K, block=block)["two_kernel"]
+    vec = n * 4
+    sp_bytes = 2 * K * tile * block * 8 + 6 * vec + 4 * K * block * 4
+    sp_flops = 2 * 2 * K * tile * block          # madd per nnz, each phase
+    sparse = {"bytes": sp_bytes, "flops": sp_flops,
+              "intensity": sp_flops / sp_bytes,
+              "t_mem_us": sp_bytes / HBM_GBPS * 1e6}
+    return {
+        "dense": dense, "sparse": sparse,
+        "hbm_bytes_ratio": dense["bytes"] / sp_bytes,
+        "storage_bytes_dense": 4 * n * d,
+        "storage_bytes_bcsc": 8 * tile * (-(-d // block) * block),
+    }
+
+
 def sharded_merge_model(n, merge_rounds=1, scheme="none", topk_frac=0.01,
                         inner=1):
     """Per-round wire bytes of the distributed solver's Δz merge (DESIGN

@@ -13,9 +13,10 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_sharded, fig2_parallelism,
-                            fig3_lasso_solvers, fig4_logreg, fig5_speedup,
-                            roofline, shotgun_scale)
+    from benchmarks import (bench_kernels, bench_sharded, bench_sparse,
+                            fig2_parallelism, fig3_lasso_solvers,
+                            fig4_logreg, fig5_speedup, roofline,
+                            shotgun_scale)
     ALL = {
         "fig2": fig2_parallelism.run,
         "fig3": fig3_lasso_solvers.run,
@@ -23,6 +24,7 @@ def main() -> None:
         "fig5": fig5_speedup.run,
         "kernels": bench_kernels.run,
         "sharded": bench_sharded.run,
+        "sparse": bench_sparse.run,
         "shotgun_scale": shotgun_scale.run,
         "roofline": roofline.run,
     }

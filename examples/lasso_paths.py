@@ -12,7 +12,8 @@ from repro.data import synthetic as syn
 
 
 def main():
-    A, y, _ = syn.large_sparse(seed=0, n=1024, d=4096)
+    # blocked-CSC layout: the solvers run on the nnz tiles, never the dense A
+    A, y, _ = syn.large_sparse(seed=0, n=1024, d=4096, layout="bcsc")
     prob = obj.make_problem(A, y, lam=0.5)
 
     path = solve_path(prob, jax.random.PRNGKey(0), lam_target=0.5, P=16,
@@ -25,6 +26,14 @@ def main():
     cold = shotgun_solve(prob, jax.random.PRNGKey(1), P=16, rounds=3000)
     print(f"\nwarm-started path final F = {path.objectives[-1]:.4f}")
     print(f"cold start (3000 rounds) F = {float(cold.trace.objective[-1]):.4f}")
+
+    # make_problem normalized the columns; map the solution back to the raw
+    # bigram-count feature space before reporting coefficients
+    x_raw = obj.unscale_x(path.x, prob.scales)
+    top = jax.numpy.argsort(-jax.numpy.abs(x_raw))[:5]
+    print("\ntop raw-space coefficients (feature, weight):")
+    for j in top:
+        print(f"  {int(j):6d}  {float(x_raw[j]):+9.4f}")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,8 @@ engine.
 """
 from repro.core.objectives import (LASSO, LOGISTIC, Problem, DupProblem,
                                    make_problem, dup_from, objective,
-                                   lambda_max, soft_threshold)
+                                   lambda_max, soft_threshold, unscale_x,
+                                   matvec, rmatvec, gather_cols)
 from repro.core.shotgun import (shooting_solve, shotgun_solve,
                                 shotgun_dup_solve, rounds_to_tolerance,
                                 diverged, get_solver, SOLVER_NAMES,

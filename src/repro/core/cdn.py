@@ -51,7 +51,7 @@ def _newton_quantities(A_p, z, y, loss):
 @functools.partial(jax.jit, static_argnames=("P", "rounds", "active_set"))
 def shotgun_cdn_solve(prob: Problem, key: jax.Array, P: int, rounds: int,
                       x0: jax.Array | None = None, active_set: bool = True) -> Result:
-    A, y, lam = prob.A, prob.y, prob.lam
+    A, y, lam = obj.require_dense(prob.A, "CDN"), prob.y, prob.lam
     n, d = A.shape
     x0 = jnp.zeros(d, A.dtype) if x0 is None else x0
     z0 = A @ x0

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 
 from repro.core import objectives as obj
 
-ENGINE_NAMES = ("scalar", "block", "fused")
+ENGINE_NAMES = ("scalar", "block", "fused", "sparse_block")
 
 
 class ScalarEngine(NamedTuple):
@@ -139,6 +139,47 @@ class FusedEngine(NamedTuple):
             block=self.block, tile_n=self.tile_n, interpret=self.interpret)
 
 
+class SparseBlockEngine(NamedTuple):
+    """Two-kernel sparse engine for BlockedCSC designs (DESIGN §8): K
+    aligned 128-blocks per round via the nnz-tile kernels
+    (``kernels/shotgun_sparse.py``), scatter-accumulating into the Δz
+    buffer.  ``A_blk`` arrives as a column-sharded ``BlockedCSC`` (leaves
+    split on the nblk axis by shard_map); only its raw rows/vals tiles are
+    read, so the global-d metadata needs no per-shard fix-up."""
+
+    K: int
+    loss: str
+    block: int = 128
+    interpret: bool = True
+
+    fold_always = False
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+        from repro.kernels.shotgun_sparse import (sparse_gather_block_matvec,
+                                                  sparse_scatter_block_update)
+        rows, vals = A_blk.rows, A_blk.vals
+        nblk = rows.shape[0]
+
+        def round_fn(carry, key_t):
+            x_l, dz = carry
+            blk = jax.random.choice(key_t, nblk, (self.K,),
+                                    replace=False).astype(jnp.int32)
+            r = obj.residual_like(z + dz, y, self.loss) * mask
+            g = sparse_gather_block_matvec(rows, vals, r, blk,
+                                           interpret=self.interpret)
+            xb = x_l.reshape(nblk, self.block)
+            x_sel = jnp.take(xb, blk, axis=0)
+            x_new = obj.soft_threshold(x_sel - g / beta, lam / beta)
+            delta = x_new - x_sel
+            dz = sparse_scatter_block_update(rows, vals, dz, blk, delta,
+                                             interpret=self.interpret)
+            x_l = xb.at[blk].add(delta).reshape(-1)
+            return (x_l, dz), None
+
+        (x_l, dz), _ = jax.lax.scan(round_fn, (x_l, jnp.zeros_like(z)), keys)
+        return x_l, dz
+
+
 def make_engine(name: str, *, loss: str, P_local: int = 8, K: int = 2,
                 block: int = 128, tile_n: int | None = None,
                 interpret: bool = True):
@@ -150,4 +191,7 @@ def make_engine(name: str, *, loss: str, P_local: int = 8, K: int = 2,
     if name == "fused":
         return FusedEngine(K=K, loss=loss, block=block, tile_n=tile_n,
                            interpret=interpret)
+    if name == "sparse_block":
+        return SparseBlockEngine(K=K, loss=loss, block=block,
+                                 interpret=interpret)
     raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_NAMES}")

@@ -6,10 +6,16 @@ Two problem families:
 
 Conventions
 -----------
-- ``A`` is (n, d) dense (the "Large, Sparse" category uses a block-CSR
-  emulation in ``repro.data.synthetic`` that still presents dense tiles).
+- ``A`` is (n, d): either a dense ``jax.Array`` or a
+  ``repro.data.sparse.BlockedCSC`` container (the sparse categories of
+  Sec. 4.1.3 — ``sparse_imaging`` / ``large_sparse`` — emit the latter
+  natively).  Everything downstream goes through the ``matvec`` /
+  ``rmatvec`` / ``gather_cols`` seam below, which dispatches on the
+  representation (DESIGN §8).
 - Columns of A are assumed normalized so diag(A^T A) = 1 (the paper's
-  w.l.o.g.); ``normalize_columns`` enforces it.
+  w.l.o.g.); ``normalize_columns`` enforces it and returns the original
+  column scales (carried on ``Problem.scales`` by ``make_problem`` so
+  ``unscale_x`` can map solutions back to the raw feature space).
 - beta is the per-coordinate curvature bound of Assumption 2.1:
   beta = 1 (squared loss), beta = 1/4 (logistic loss)  [Eq. 6].
 
@@ -26,6 +32,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.data.sparse import BlockedCSC, SparseCols
+
 LASSO = "lasso"
 LOGISTIC = "logistic"
 
@@ -33,15 +41,17 @@ BETA = {LASSO: 1.0, LOGISTIC: 0.25}
 
 
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=("A", "y", "lam"), meta_fields=("loss",))
+                   data_fields=("A", "y", "lam", "scales"),
+                   meta_fields=("loss",))
 @dataclasses.dataclass(frozen=True)
 class Problem:
     """An instance of Eq. (1).  ``loss`` is static metadata under jit."""
 
-    A: jax.Array          # (n, d) design matrix, column-normalized
+    A: jax.Array          # (n, d) design, dense or BlockedCSC, col-normalized
     y: jax.Array          # (n,) observations (reals for lasso, +-1 for logistic)
     lam: jax.Array        # scalar regularization
     loss: str             # LASSO | LOGISTIC
+    scales: jax.Array | None = None   # (d,) original column norms, or None
 
     def _replace(self, **kw) -> "Problem":
         return dataclasses.replace(self, **kw)
@@ -59,19 +69,87 @@ class Problem:
         return BETA[self.loss]
 
 
-def normalize_columns(A: jax.Array, eps: float = 1e-12) -> tuple[jax.Array, jax.Array]:
-    """Scale columns of A to unit l2 norm; returns (A_normalized, scales)."""
+def normalize_columns(A, eps: float = 1e-12):
+    """Scale columns of A (dense or BlockedCSC) to unit l2 norm; returns
+    (A_normalized, scales)."""
+    if isinstance(A, BlockedCSC):
+        scales = A.col_norms()
+        scales = jnp.where(scales < eps, 1.0, scales)
+        return A.scale_cols(scales), scales
     scales = jnp.sqrt(jnp.sum(A * A, axis=0))
     scales = jnp.where(scales < eps, 1.0, scales)
     return A / scales[None, :], scales
 
 
 def make_problem(A, y, lam, loss=LASSO, normalize=True) -> Problem:
-    A = jnp.asarray(A, jnp.float32)
+    if not isinstance(A, BlockedCSC):
+        A = jnp.asarray(A, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
+    scales = None
     if normalize:
-        A, _ = normalize_columns(A)
-    return Problem(A=A, y=y, lam=jnp.float32(lam), loss=loss)
+        A, scales = normalize_columns(A)
+    return Problem(A=A, y=y, lam=jnp.float32(lam), loss=loss, scales=scales)
+
+
+def unscale_x(x: jax.Array, scales: jax.Array | None) -> jax.Array:
+    """Map a solution of the column-normalized problem back to the raw
+    feature space: A_raw (x / scales) == A_norm x.  Accepts the ``scales``
+    from ``normalize_columns`` / ``Problem.scales`` (None = identity)."""
+    return x if scales is None else x / scales
+
+
+# ---------------------------------------------------------------------------
+# Representation seam (DESIGN §8): every consumer of A goes through these
+# four ops so dense arrays and BlockedCSC containers run the same code.
+# ---------------------------------------------------------------------------
+
+def require_dense(A, what: str):
+    """Clear trace-time error for solver families with no sparse path (the
+    CDN inner-Newton variants and the duplicated-feature form index raw
+    columns); returns A unchanged when dense."""
+    if isinstance(A, BlockedCSC):
+        raise TypeError(
+            f"{what} supports dense designs only, got BlockedCSC — use the "
+            "shotgun / block solver families for sparse A (DESIGN §8)")
+    return A
+
+
+def matvec(A, x) -> jax.Array:
+    """A @ x for dense or BlockedCSC A."""
+    if isinstance(A, BlockedCSC):
+        return A.matvec(x)
+    return A @ x
+
+
+def rmatvec(A, r) -> jax.Array:
+    """A^T r for dense or BlockedCSC A."""
+    if isinstance(A, BlockedCSC):
+        return A.rmatvec(r)
+    return A.T @ r
+
+
+def gather_cols(A, idx):
+    """Pack of the P columns ``idx``: dense (n, P) array, or the nnz tiles
+    (``SparseCols``) for BlockedCSC — O(n·P) vs O(tile·P) bytes."""
+    if isinstance(A, BlockedCSC):
+        return A.gather_cols(idx)
+    return A[:, idx]
+
+
+def cols_rmatvec(cols, r) -> jax.Array:
+    """(P,) coordinate gradients A_P^T r from a ``gather_cols`` pack."""
+    if isinstance(cols, SparseCols):
+        rv = jnp.take(jnp.asarray(r, jnp.float32), cols.rows)   # (P, tile)
+        return jnp.sum(cols.vals * rv, axis=1)
+    return cols.T @ r
+
+
+def cols_matvec_add(cols, delta, z) -> jax.Array:
+    """z + A_P @ delta (the maintained-margin update) from a column pack."""
+    if isinstance(cols, SparseCols):
+        return z.at[cols.rows.reshape(-1)].add(
+            (cols.vals * delta[:, None]).reshape(-1))
+    return z + cols @ delta
 
 
 # ---------------------------------------------------------------------------
@@ -106,7 +184,7 @@ def objective_from_margin(z, x, prob: Problem) -> jax.Array:
 
 
 def objective(x: jax.Array, prob: Problem) -> jax.Array:
-    return objective_from_margin(prob.A @ x, x, prob)
+    return objective_from_margin(matvec(prob.A, x), x, prob)
 
 
 def residual_like(z: jax.Array, y: jax.Array, loss: str) -> jax.Array:
@@ -138,11 +216,11 @@ def shooting_delta(x_j, g_j, lam, beta):
     return x_new - x_j
 
 
-def lambda_max(A: jax.Array, y: jax.Array, loss: str) -> jax.Array:
+def lambda_max(A, y: jax.Array, loss: str) -> jax.Array:
     """Smallest lam for which x = 0 is optimal: ||A^T dL/dz(0)||_inf."""
     z0 = jnp.zeros(A.shape[0], A.dtype)
     r0 = residual_like(z0, y, loss)
-    return jnp.max(jnp.abs(A.T @ r0))
+    return jnp.max(jnp.abs(rmatvec(A, r0)))
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +247,7 @@ class DupProblem:
 
 
 def dup_from(prob: Problem) -> DupProblem:
+    require_dense(prob.A, "the duplicated-feature form (Eq. 4)")
     return DupProblem(prob.A, prob.y, prob.lam, prob.loss)
 
 

@@ -52,6 +52,7 @@ from repro.core import objectives as obj
 from repro.core.engines import ENGINE_NAMES, ScalarEngine, make_engine
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
+from repro.data.sparse import BlockedCSC, pad_feature_blocks
 
 MERGE_MODES = ("round", "launch")
 COMPRESSION_SCHEMES = ("none", "int8", "topk")
@@ -122,7 +123,7 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
         me = jnp.int32(0)
         for ax in axes:                      # flattened shard index
             me = me * mesh.shape[ax] + jax.lax.axis_index(ax)
-        z = jax.lax.psum(A_blk @ x0_blk, axes)     # global margin of x0
+        z = jax.lax.psum(obj.matvec(A_blk, x0_blk), axes)  # global margin of x0
         ef = jnp.zeros(n, jnp.float32)             # §7 error feedback
 
         def merge_fn(carry, keys_m):
@@ -159,9 +160,16 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
         (x_l, z, _), (fs, nnzs) = jax.lax.scan(outer_fn, (x0_l, z, ef), keys)
         return x_l, z, fs, nnzs
 
+    if isinstance(A, BlockedCSC):
+        # column-block sharding: split the (nblk, tile, block) tiles on the
+        # leading axis; metadata rides along untouched (engines read shapes
+        # from the arrays, DESIGN §8)
+        a_spec = jax.tree_util.tree_map(lambda _: P(axes, None, None), A)
+    else:
+        a_spec = P(None, axes)
     solve = shard_map(
         solve_local, mesh=mesh,
-        in_specs=(P(None, axes), P(None), P(None), P(axes), P(None)),
+        in_specs=(a_spec, P(None), P(None), P(axes), P(None)),
         out_specs=(P(axes), P(None), P(None), P(None)),
         check_vma=False,
     )
@@ -195,7 +203,9 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
 
     engine      "scalar" (P = P_local × shards coordinate updates/round),
                 "block" / "fused" (P = K × 128 × shards via the Pallas
-                kernels; ``interpret=True`` on CPU).
+                kernels; ``interpret=True`` on CPU), "sparse_block"
+                (same P but over a BlockedCSC design via the nnz-tile
+                kernels, DESIGN §8 — column blocks sharded on nblk).
     merge       "round" — one Δz psum per round (no staleness);
                 "launch" — ``rounds_per_launch`` stale rounds per merge.
     x0          optional warm start (λ-continuation); zero-padded and
@@ -218,7 +228,26 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
     nshards = mesh.devices.size
     merge_rounds = 1 if merge == "round" else rounds_per_launch
 
-    if engine == "scalar":
+    if engine == "sparse_block":
+        if not isinstance(prob.A, BlockedCSC):
+            raise ValueError(
+                "engine='sparse_block' needs a BlockedCSC design; got "
+                f"{type(prob.A).__name__} (use data.sparse.BlockedCSC."
+                "from_dense or a layout='bcsc' generator)")
+        A = pad_feature_blocks(prob.A, nshards)
+        nblk_local = A.nblk // nshards
+        if K > nblk_local:
+            raise ValueError(
+                f"K={K} blocks > {nblk_local} local blocks "
+                f"(nblk={A.nblk}, shards={nshards})")
+        y, mask = prob.y, jnp.ones(prob.n, jnp.float32)
+        eng = make_engine(engine, loss=prob.loss, K=K, block=A.block,
+                          interpret=interpret)
+    elif isinstance(prob.A, BlockedCSC):
+        raise ValueError(
+            f"engine={engine!r} needs a dense design; BlockedCSC problems "
+            "use engine='sparse_block'")
+    elif engine == "scalar":
         A, y = pad_features(prob.A, nshards), prob.y
         mask = jnp.ones(prob.n, jnp.float32)
         eng = make_engine(engine, loss=prob.loss, P_local=P_local)
@@ -239,9 +268,9 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
         eng = make_engine(engine, loss=prob.loss, K=K, block=BLOCK,
                           tile_n=tile_n, interpret=interpret)
 
-    x0 = (jnp.zeros(A.shape[1], jnp.float32) if x0 is None
-          else jnp.pad(jnp.asarray(x0, jnp.float32),
-                       (0, A.shape[1] - prob.d)))
+    d_full = A.d_pad if isinstance(A, BlockedCSC) else A.shape[1]
+    x0 = (jnp.zeros(d_full, jnp.float32) if x0 is None
+          else jnp.pad(jnp.asarray(x0, jnp.float32), (0, d_full - prob.d)))
     res = _engine_solve(A, y, mask, x0, prob.lam, prob.beta, key, engine=eng,
                         rounds=rounds, merge_rounds=merge_rounds, mesh=mesh,
                         trace_every=trace_every, compression=compression,

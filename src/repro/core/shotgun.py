@@ -49,23 +49,29 @@ def _sample(key, d, P, replace: bool):
 @functools.partial(jax.jit, static_argnames=("P", "rounds", "replace"))
 def shotgun_solve(prob: Problem, key: jax.Array, P: int, rounds: int,
                   x0: jax.Array | None = None, replace: bool = True) -> Result:
-    """Run `rounds` synchronous Shotgun rounds of P parallel updates each."""
+    """Run `rounds` synchronous Shotgun rounds of P parallel updates each.
+
+    ``prob.A`` may be dense or a ``BlockedCSC`` container: the round is
+    written against the ``gather_cols`` / ``cols_rmatvec`` /
+    ``cols_matvec_add`` seam, so on a sparse design the per-round cost is
+    O(tile·P) nnz-tile work instead of O(n·P) dense columns (DESIGN §8).
+    """
     A, y, lam, beta = prob.A, prob.y, prob.lam, prob.beta
     d = A.shape[1]
     x0 = jnp.zeros(d, A.dtype) if x0 is None else x0
-    z0 = A @ x0
+    z0 = obj.matvec(A, x0)
 
     def round_fn(carry, key_t):
         x, z = carry
         idx = _sample(key_t, d, P, replace)
         r = obj.residual_like(z, y, prob.loss)
-        Ap = A[:, idx]                       # (n, P) gathered columns
-        g = Ap.T @ r                         # (P,) coordinate gradients
+        cols = obj.gather_cols(A, idx)       # (n, P) dense or nnz tiles
+        g = obj.cols_rmatvec(cols, r)        # (P,) coordinate gradients
         delta = obj.shooting_delta(x[idx], g, lam, beta)
         # Collective update Δx: scatter-add sums deltas of duplicate draws,
         # matching the multiset semantics of Alg. 2.
         x = x.at[idx].add(delta)
-        z = z + Ap @ delta
+        z = obj.cols_matvec_add(cols, delta, z)
         f = obj.objective_from_margin(z, x, prob)
         nnz = jnp.sum(x != 0)
         return (x, z), (f, nnz)
@@ -106,12 +112,17 @@ def shotgun_dup_solve(dp: DupProblem, key: jax.Array, P: int, rounds: int,
         Ap = A[:, idx % d] * sign[None, :]              # (n, P)
         g = Ap.T @ r + lam                              # (∇F)_j, Eq. 5 context
         delta = jnp.maximum(-xhat[idx], -g / beta)      # Eq. 5
-        xhat = xhat.at[idx].add(delta)
+        xhat_raw = xhat.at[idx].add(delta)
         # Parallel same-coordinate updates may overshoot below 0; the paper's
         # write-conflict note (end of Sec. 3.1) permits clipping to keep
-        # x̂ >= 0 — a no-op unless the multiset collides.
-        xhat = jnp.maximum(xhat, 0.0)
-        z = A @ (xhat[:d] - xhat[d:])
+        # x̂ >= 0 — a no-op unless the multiset collides.  Maintain z with one
+        # scatter of the deltas plus the (clipped − unclipped) corrections
+        # folded in; duplicate draws of a coordinate all see the same
+        # correction, so divide by the draw multiplicity to apply it once.
+        xhat = jnp.maximum(xhat_raw, 0.0)
+        counts = jnp.zeros(d2, A.dtype).at[idx].add(1.0)
+        corr = (xhat - xhat_raw)[idx] / counts[idx]
+        z = z + Ap @ (delta + corr)                     # maintained Ax, O(n·P)
         f = obj.data_loss_from_margin(z, y, dp.loss) + lam * jnp.sum(xhat)
         nnz = jnp.sum(obj.dup_to_signed(xhat) != 0)
         return (xhat, z), (f, nnz)

@@ -4,9 +4,10 @@ rho = spectral radius of A^T A (its largest eigenvalue; A^T A is PSD).
 P*  = ceil(d / rho)  — the paper's predicted maximal useful parallelism
       (without duplicated features, Thm 3.2 remark).
 
-Power iteration runs through A (cost O(nd) per step) and never forms
-A^T A (d x d).  The paper notes power iteration gives good-enough
-estimates "within a small fraction of the total runtime".
+Power iteration runs through A (cost O(nd) per step, O(nnz) for BlockedCSC
+designs — it only touches A through the ``objectives.matvec``/``rmatvec``
+seam) and never forms A^T A (d x d).  The paper notes power iteration gives
+good-enough estimates "within a small fraction of the total runtime".
 """
 from __future__ import annotations
 
@@ -15,9 +16,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import objectives as obj
+
 
 @functools.partial(jax.jit, static_argnames=("iters",))
-def spectral_radius(A: jax.Array, key: jax.Array | None = None, iters: int = 100) -> jax.Array:
+def spectral_radius(A, key: jax.Array | None = None, iters: int = 100) -> jax.Array:
     """Largest eigenvalue of A^T A via power iteration with Rayleigh quotient."""
     d = A.shape[1]
     if key is None:
@@ -26,13 +29,13 @@ def spectral_radius(A: jax.Array, key: jax.Array | None = None, iters: int = 100
     v0 = v0 / jnp.linalg.norm(v0)
 
     def step(v, _):
-        w = A.T @ (A @ v)
+        w = obj.rmatvec(A, obj.matvec(A, v))
         nw = jnp.linalg.norm(w)
         v = w / jnp.maximum(nw, 1e-30)
         return v, nw
 
     v, _ = jax.lax.scan(step, v0, None, length=iters)
-    Av = A @ v
+    Av = obj.matvec(A, v)
     return jnp.vdot(Av, Av) / jnp.maximum(jnp.vdot(v, v), 1e-30)
 
 

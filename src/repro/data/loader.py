@@ -31,7 +31,11 @@ class TokenLoader:
     """Deterministic synthetic LM token stream, shardable by (host, step)."""
 
     def __init__(self, cfg: LoaderConfig, *, host_id: int = 0, num_hosts: int = 1):
-        assert cfg.global_batch % num_hosts == 0
+        if cfg.global_batch % num_hosts:
+            # raise (don't assert — asserts vanish under ``python -O``)
+            raise ValueError(
+                f"global_batch={cfg.global_batch} not divisible by "
+                f"num_hosts={num_hosts}")
         self.cfg = cfg
         self.host_id = host_id
         self.num_hosts = num_hosts

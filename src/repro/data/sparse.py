@@ -1,0 +1,202 @@
+"""Blocked-CSC sparse design matrices (DESIGN §8).
+
+The paper's empirical case is built on sparse designs (Sparse-Imaging and
+Large-Sparse, Sec. 4.1.3), yet a dense (n, d) array is memory-bound at the
+paper's scale before the solver even starts.  ``BlockedCSC`` stores A by
+*aligned column blocks of 128* — the same blocks the Pallas kernels update —
+as fixed-shape padded CSC tiles:
+
+    rows  (nblk, tile, block) int32    row index of each stored entry
+    vals  (nblk, tile, block) float32  value of each stored entry
+
+Column j lives at (b, :, c) with b = j // block, c = j % block; its nnz
+entries occupy the leading slots of the ``tile`` axis and the rest are
+padding (row 0, value 0 — additive identities for every op below).  ``tile``
+is the max per-column nnz rounded up to a multiple of 8 (f32 sublane), so
+the whole container is two rectangular arrays: pytree-registrable, jit/
+shard_map friendly, and indexable by the scalar-prefetched block pointers
+the sparse Pallas kernels use (``kernels/shotgun_sparse.py``).
+
+Sizes: dense is 4·n·d bytes; blocked CSC is 8·tile·d — a win whenever the
+padded per-column nnz is below n/2 (density 0.002 at n = 2048 gives
+tile ≈ 16, a ~64× cut).
+
+Shard-local code (``core/engines.py``) operates on the raw (rows, vals)
+arrays via the ``bcsc_*`` functions so a column-sharded container (leaves
+split on the nblk axis by shard_map) needs no metadata fix-up; the
+container's ``d`` metadata is only used to slice padding off full-width
+results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 128      # aligned column-block width, matches kernels.shotgun_block
+TILE_PAD = 8     # tile axis padded to a multiple of 8 (f32 sublane)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("rows", "vals"),
+                   meta_fields=("n", "d", "block"))
+@dataclasses.dataclass(frozen=True)
+class BlockedCSC:
+    """Blocked-CSC design matrix.  ``n``/``d`` are the true (unpadded)
+    shape; the stored width is ``d_pad = nblk · block ≥ d`` with the padded
+    tail columns all-zero."""
+
+    rows: jax.Array      # (nblk, tile, block) int32
+    vals: jax.Array      # (nblk, tile, block) float32
+    n: int
+    d: int
+    block: int = BLOCK
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n, self.d)
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    @property
+    def nblk(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def tile(self) -> int:
+        return self.rows.shape[1]
+
+    @property
+    def d_pad(self) -> int:
+        return self.nblk * self.block
+
+    @property
+    def nnz(self):
+        return jnp.sum(self.vals != 0)
+
+    # ---- dense interop ---------------------------------------------------
+
+    @staticmethod
+    def from_dense(A, block: int = BLOCK, tile: int | None = None
+                   ) -> "BlockedCSC":
+        """Pack a dense (n, d) array; exact (no thresholding), so
+        ``to_dense(from_dense(A)) == A`` up to the zero-column padding."""
+        A = np.asarray(A, np.float32)
+        n, d = A.shape
+        d_pad = -(-d // block) * block
+        nblk = d_pad // block
+        counts = (A != 0).sum(axis=0)
+        if tile is None:
+            tile = max(TILE_PAD, -(-int(counts.max(initial=0)) // TILE_PAD)
+                       * TILE_PAD)
+        elif counts.max(initial=0) > tile:
+            raise ValueError(
+                f"tile={tile} < max column nnz {int(counts.max())}")
+        rows = np.zeros((nblk, tile, block), np.int32)
+        vals = np.zeros((nblk, tile, block), np.float32)
+        # vectorized pack: nonzeros of A.T come out sorted by (col, row), so
+        # each entry's tile slot is its rank within its column's run
+        cols_nz, rows_nz = np.nonzero(A.T)
+        starts = np.concatenate(
+            [[0], np.cumsum(np.bincount(cols_nz, minlength=d)[:-1])])
+        slot = np.arange(cols_nz.size) - starts[cols_nz]
+        rows[cols_nz // block, slot, cols_nz % block] = rows_nz
+        vals[cols_nz // block, slot, cols_nz % block] = A[rows_nz, cols_nz]
+        return BlockedCSC(rows=jnp.asarray(rows), vals=jnp.asarray(vals),
+                          n=n, d=d, block=block)
+
+    def to_dense(self) -> jax.Array:
+        """Densify (tests / small problems only): (n, d) float32."""
+        out = jnp.zeros((self.n, self.d_pad), jnp.float32)
+        cols = jnp.broadcast_to(
+            jnp.arange(self.d_pad, dtype=jnp.int32).reshape(
+                self.nblk, 1, self.block), self.rows.shape)
+        out = out.at[self.rows.reshape(-1), cols.reshape(-1)].add(
+            self.vals.reshape(-1))
+        return out[:, : self.d]
+
+    # ---- linear ops (thin wrappers over the shard-safe functions) --------
+
+    def matvec(self, x) -> jax.Array:
+        """A @ x — x of length d or d_pad; returns (n,)."""
+        x = jnp.asarray(x)
+        if x.shape[0] != self.d_pad:
+            x = jnp.pad(x, (0, self.d_pad - x.shape[0]))
+        return bcsc_matvec(self.rows, self.vals, x, self.n)
+
+    def rmatvec(self, r) -> jax.Array:
+        """Aᵀ r — returns (d,) (padding sliced off)."""
+        return bcsc_rmatvec(self.rows, self.vals, r)[: self.d]
+
+    def col_norms(self) -> jax.Array:
+        """Per-column ℓ₂ norms, (d,)."""
+        return jnp.sqrt(jnp.sum(self.vals * self.vals, axis=1)
+                        ).reshape(-1)[: self.d]
+
+    def scale_cols(self, scales) -> "BlockedCSC":
+        """A · diag(1/scales) — scales (d,); padded tail columns untouched."""
+        s = jnp.pad(jnp.asarray(scales, jnp.float32),
+                    (0, self.d_pad - self.d), constant_values=1.0)
+        return dataclasses.replace(
+            self, vals=self.vals / s.reshape(self.nblk, 1, self.block))
+
+    def gather_cols(self, idx) -> "SparseCols":
+        """nnz tiles of columns ``idx`` (P,): rows/vals (P, tile)."""
+        b, c = idx // self.block, idx % self.block
+        return SparseCols(rows=self.rows[b, :, c], vals=self.vals[b, :, c])
+
+
+class SparseCols:
+    """A gathered pack of P sparse columns (the sparse counterpart of the
+    dense ``A[:, idx]`` (n, P) gather): ``rows``/``vals`` are (P, tile)."""
+
+    __slots__ = ("rows", "vals")
+
+    def __init__(self, rows, vals):
+        self.rows = rows
+        self.vals = vals
+
+
+jax.tree_util.register_pytree_node(
+    SparseCols,
+    lambda sc: ((sc.rows, sc.vals), None),
+    lambda _, leaves: SparseCols(*leaves))
+
+
+# ---------------------------------------------------------------------------
+# Shard-safe functional ops: shapes come from the arrays, never from the
+# container metadata, so column-sharded leaves (shard_map) work unchanged.
+# ---------------------------------------------------------------------------
+
+def bcsc_matvec(rows, vals, x, n: int) -> jax.Array:
+    """A @ x with A given as (nblk, tile, block) tiles; x (nblk·block,)."""
+    nblk, tile, block = rows.shape
+    contrib = vals * x.reshape(nblk, 1, block)
+    return jnp.zeros(n, jnp.float32).at[rows.reshape(-1)].add(
+        contrib.reshape(-1))
+
+
+def bcsc_rmatvec(rows, vals, r) -> jax.Array:
+    """Aᵀ r — returns the padded-width (nblk·block,) vector."""
+    rv = jnp.take(jnp.asarray(r, jnp.float32), rows)     # (nblk, tile, block)
+    return jnp.sum(vals * rv, axis=1).reshape(-1)
+
+
+def pad_feature_blocks(S: BlockedCSC, num_shards: int) -> BlockedCSC:
+    """Right-pad with all-zero column blocks so nblk divides evenly across
+    shards (the sparse analogue of ``core.sharded.pad_features``); zero
+    columns are fixed points of the update, so trajectories of real
+    coordinates are unchanged."""
+    pad = (-S.nblk) % num_shards
+    if not pad:
+        return S
+    zshape = (pad, S.tile, S.block)
+    return dataclasses.replace(
+        S,
+        rows=jnp.concatenate([S.rows, jnp.zeros(zshape, S.rows.dtype)]),
+        vals=jnp.concatenate([S.vals, jnp.zeros(zshape, S.vals.dtype)]))

@@ -10,6 +10,14 @@ Categories (sizes are scaled-down defaults; pass n/d for bigger):
 
 Each returns (A, y, x_true).  Columns are NOT pre-normalized; use
 ``objectives.make_problem(..., normalize=True)``.
+
+The sparse categories (``sparse_imaging`` / ``large_sparse``) natively emit
+a blocked-CSC container with ``layout="bcsc"`` (DESIGN §8): identical draws
+to the dense layout for the same seed — the container packs the same
+matrix — so dense/sparse runs are directly comparable.  (Generation still
+draws the dense mask once, trading peak generation memory for exact
+cross-layout reproducibility; the container's at-rest/solver-side wins are
+what unlock paper-scale shapes.)
 """
 from __future__ import annotations
 
@@ -49,7 +57,17 @@ def singlepixcam(seed=0, n=410, d=1024, nnz_frac=0.05, noise=0.005):
     return A, y, x
 
 
-def sparse_imaging(seed=0, n=954, d=4096, density=0.01, nnz_frac=0.02, noise=0.005):
+def _maybe_bcsc(A, layout: str):
+    if layout == "dense":
+        return A
+    if layout == "bcsc":
+        from repro.data.sparse import BlockedCSC
+        return BlockedCSC.from_dense(A)
+    raise ValueError(f"unknown layout {layout!r}; choose 'dense' or 'bcsc'")
+
+
+def sparse_imaging(seed=0, n=954, d=4096, density=0.01, nnz_frac=0.02,
+                   noise=0.005, layout="dense"):
     """Very sparse random -1/+1 measurement matrix."""
     rng = np.random.default_rng(seed)
     mask = rng.random((n, d)) < density
@@ -57,10 +75,11 @@ def sparse_imaging(seed=0, n=954, d=4096, density=0.01, nnz_frac=0.02, noise=0.0
     A = (mask * signs).astype(np.float32)
     x = _sparse_signal(rng, d, nnz_frac)
     y = A @ x + noise * rng.standard_normal(n).astype(np.float32)
-    return A, y, x
+    return _maybe_bcsc(A, layout), y, x
 
 
-def large_sparse(seed=0, n=2048, d=16384, density=0.002, nnz_frac=0.005, noise=0.01):
+def large_sparse(seed=0, n=2048, d=16384, density=0.002, nnz_frac=0.005,
+                 noise=0.01, layout="dense"):
     """Bag-of-bigrams flavor: sparse nonnegative counts, heavy-tailed."""
     rng = np.random.default_rng(seed)
     mask = rng.random((n, d)) < density
@@ -68,7 +87,7 @@ def large_sparse(seed=0, n=2048, d=16384, density=0.002, nnz_frac=0.005, noise=0
     A = (mask * vals).astype(np.float32)
     x = _sparse_signal(rng, d, nnz_frac)
     y = A @ x + noise * rng.standard_normal(n).astype(np.float32)
-    return A, y, x
+    return _maybe_bcsc(A, layout), y, x
 
 
 def logistic_data(seed=0, n=4096, d=512, nnz_frac=0.05, flip=0.02):

@@ -14,6 +14,10 @@
 
 On CPU (this container) pass ``interpret=True``; on TPU the same code path
 compiles to Mosaic.  ``ref.py`` holds the pure-jnp oracles used by the tests.
+
+``block_shotgun_solve`` also accepts ``BlockedCSC`` problems (DESIGN §8):
+the round scan then runs the nnz-tile kernels from ``shotgun_sparse.py``
+(same block draws for the same key; ``fused=True`` is dense-only).
 """
 from __future__ import annotations
 
@@ -25,10 +29,13 @@ import jax.numpy as jnp
 from repro.core import objectives as obj
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
+from repro.data.sparse import BlockedCSC, bcsc_matvec
 from repro.kernels.shotgun_block import (BLOCK, TILE_N, auto_tile_n,
                                          fused_shotgun_rounds,
                                          gather_block_matvec,
                                          scatter_block_update)
+from repro.kernels.shotgun_sparse import (sparse_gather_block_matvec,
+                                          sparse_scatter_block_update)
 
 
 def pad_problem(A, y, block=BLOCK, tile_n=TILE_N):
@@ -118,6 +125,59 @@ def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
                               nnz=nnzs.reshape(rounds)))
 
 
+@functools.partial(jax.jit, static_argnames=("loss", "interpret"))
+def sparse_block_shotgun_round(rows, vals, z, x, blk_idx, lam, beta, y,
+                               loss: str = obj.LASSO,
+                               interpret: bool = False):
+    """One Block-Shotgun round on BlockedCSC nnz tiles (the sparse
+    counterpart of ``block_shotgun_round``; no mask — the sparse path never
+    pads samples).  Returns (x_new, z_new, delta)."""
+    nblk, tile, block = rows.shape
+    r = obj.residual_like(z, y, loss)
+    g = sparse_gather_block_matvec(rows, vals, r, blk_idx,
+                                   interpret=interpret)
+    xb = x.reshape(nblk, block)
+    x_sel = jnp.take(xb, blk_idx, axis=0)
+    x_new_sel = obj.soft_threshold(x_sel - g / beta, lam / beta)
+    delta = x_new_sel - x_sel
+    z_new = sparse_scatter_block_update(rows, vals, z, blk_idx, delta,
+                                        interpret=interpret)
+    xb = xb.at[blk_idx].add(delta)
+    return xb.reshape(-1), z_new, delta
+
+
+@functools.partial(jax.jit, static_argnames=("K", "rounds", "loss",
+                                             "interpret"))
+def _sparse_solve(rows, vals, y, lam, beta, key, K, rounds, loss, interpret,
+                  x0=None):
+    """Round scan over the sparse Pallas kernels (BlockedCSC tiles).
+
+    Draws the same block indices as the dense ``_solve`` for the same key,
+    so dense/sparse trajectories coincide up to fp accumulation order.  No
+    sample padding is needed: z stays full-length (n,) in both kernels.
+    """
+    nblk, tile, block = rows.shape
+    n = y.shape[0]
+    d_pad = nblk * block
+    mask = jnp.ones(n, jnp.float32)
+    x0 = jnp.zeros(d_pad, jnp.float32) if x0 is None else x0.astype(jnp.float32)
+    z0 = bcsc_matvec(rows, vals, x0, n)
+
+    def round_fn(carry, key_t):
+        x, z = carry
+        blk_idx = jax.random.choice(key_t, nblk, (K,),
+                                    replace=False).astype(jnp.int32)
+        x, z, _ = sparse_block_shotgun_round(rows, vals, z, x, blk_idx, lam,
+                                             beta, y, loss=loss,
+                                             interpret=interpret)
+        f = obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
+        return (x, z), (f, jnp.sum(x != 0))
+
+    keys = jax.random.split(key, rounds)
+    (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+
+
 def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
                         block: int = BLOCK, interpret: bool = True,
                         fused: bool = False, rounds_per_launch: int = 8,
@@ -136,7 +196,27 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
     zero-padded to the block-padded width and the margin is initialized to
     ``z0 = A x0`` — padded columns carry zero weight so the trajectory of
     real coordinates is unchanged.
+
+    A ``BlockedCSC`` problem routes to the sparse kernels
+    (``kernels/shotgun_sparse.py``): same block draws for the same key, so
+    the trajectory matches the dense path on the densified design.  The
+    fused multi-round kernel has no sparse variant yet (its VMEM dataflow
+    assumes streamed dense blocks), so ``fused=True`` raises.
     """
+    if isinstance(prob.A, BlockedCSC):
+        if fused:
+            raise ValueError("fused=True is not supported for BlockedCSC "
+                             "problems; use the two-kernel sparse path")
+        if block != prob.A.block:
+            raise ValueError(f"block={block} != BlockedCSC block "
+                             f"{prob.A.block}")
+        if x0 is not None:
+            x0 = jnp.pad(jnp.asarray(x0), (0, prob.A.d_pad - prob.d))
+        res = _sparse_solve(prob.A.rows, prob.A.vals, prob.y, prob.lam,
+                            prob.beta, key, K, rounds, prob.loss, interpret,
+                            x0=x0)
+        return Result(x=res.x[: prob.d], z=res.z, trace=res.trace)
+
     A, y, mask = pad_problem(prob.A, prob.y)
     if x0 is not None:
         x0 = jnp.pad(jnp.asarray(x0), (0, A.shape[1] - prob.d))

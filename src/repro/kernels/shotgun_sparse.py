@@ -1,0 +1,132 @@
+"""Pallas Block-Shotgun kernels for BlockedCSC designs (DESIGN §8).
+
+Sparse counterparts of the two dense round kernels in ``shotgun_block.py``.
+The dense kernels stream whole (tile_n × 128) column blocks of A; at the
+paper's Large-Sparse densities (~0.002) that is ~500× more HBM traffic than
+the nonzeros.  Here a scalar-prefetched block pointer selects the selected
+block's padded nnz tiles instead:
+
+  sparse_gather_block_matvec   g_B = A_Bᵀ r     grid (K,): fetch the block's
+                               (tile, 128) rows/vals tiles, gather r at the
+                               row indices, multiply-accumulate over the
+                               tile axis — O(tile·128) bytes per block vs
+                               O(n·128) dense.
+  sparse_scatter_block_update  z += Σ_B A_B δ_B  grid (K,): scatter-add
+                               vals·δ into a VMEM-resident f32 z accumulator
+                               at the row indices; flushed once per call.
+
+Padded tile slots hold (row 0, value 0) so they are additive no-ops in both
+directions.  Like the dense kernels these run under ``interpret=True`` on
+this CPU container; the gather/scatter lower to XLA there and to Mosaic's
+dynamic gather / scatter-accumulate on TPU.  The layout is chosen for the
+TPU path: tiles are rectangular (tile × 128), lane-aligned, and selected by
+``PrefetchScalarGridSpec`` index maps exactly like the dense A blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.shotgun_block import BLOCK
+
+
+def _gather_kernel(idx_ref, rows_ref, vals_ref, r_ref, g_ref):
+    # grid = (K,); one selected column block per step.
+    rows = rows_ref[0]                        # (tile, B) int32
+    vals = vals_ref[0].astype(jnp.float32)    # (tile, B)
+    r = r_ref[...].reshape(-1)                # (n,)
+    rv = jnp.take(r, rows)                    # gather, (tile, B)
+    g_ref[...] = jnp.sum(vals * rv, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_gather_block_matvec(rows, vals, r, blk_idx,
+                               interpret: bool = False):
+    """g (K, block) = A_Bᵀ r for the selected blocks, from nnz tiles.
+
+    rows/vals: (nblk, tile, block) BlockedCSC tiles; r: (n,) f32;
+    blk_idx: (K,) int32.
+    """
+    nblk, tile, block = rows.shape
+    n = r.shape[0]
+    K = blk_idx.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, tile, block), lambda k, idx: (idx[k], 0, 0)),
+            pl.BlockSpec((1, tile, block), lambda k, idx: (idx[k], 0, 0)),
+            pl.BlockSpec((n, 1), lambda k, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda k, idx: (k, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, block), jnp.float32),
+        interpret=interpret,
+    )(blk_idx.astype(jnp.int32), rows, vals,
+      r.reshape(n, 1).astype(jnp.float32))
+
+
+def _make_scatter_kernel(K: int):
+    def kernel(idx_ref, rows_ref, vals_ref, d_ref, z_ref, out_ref, acc_ref):
+        k = pl.program_id(0)
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = z_ref[...].astype(jnp.float32)
+
+        rows = rows_ref[0]                        # (tile, B)
+        vals = vals_ref[0].astype(jnp.float32)
+        dlt = d_ref[...]                          # (1, B)
+        contrib = vals * dlt                      # broadcast over tile axis
+        n = acc_ref.shape[0]
+        z = acc_ref[...].reshape(-1)
+        acc_ref[...] = z.at[rows.reshape(-1)].add(
+            contrib.reshape(-1)).reshape(n, 1)
+
+        @pl.when(k == K - 1)
+        def _flush():
+            out_ref[...] = acc_ref[...]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_scatter_block_update(rows, vals, z, blk_idx, delta,
+                                interpret: bool = False):
+    """z_new = z + Σ_k A_{B_k} δ_k from nnz tiles — f32 accumulation.
+
+    delta: (K, block).  Duplicate blocks in ``blk_idx`` accumulate, matching
+    the multiset semantics of the dense scatter.
+    """
+    nblk, tile, block = rows.shape
+    n = z.shape[0]
+    K = blk_idx.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, tile, block), lambda k, idx: (idx[k], 0, 0)),
+            pl.BlockSpec((1, tile, block), lambda k, idx: (idx[k], 0, 0)),
+            pl.BlockSpec((1, block), lambda k, idx: (k, 0)),
+            pl.BlockSpec((n, 1), lambda k, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, 1), lambda k, idx: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((n, 1), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _make_scatter_kernel(K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(blk_idx.astype(jnp.int32), rows, vals,
+      delta.astype(jnp.float32), z.reshape(n, 1).astype(jnp.float32))
+    return out.reshape(n).astype(z.dtype)

@@ -35,6 +35,14 @@ def test_loader_host_sharding_disjoint_and_sized():
                               np.asarray(parts[1]["tokens"]))
 
 
+def test_loader_rejects_indivisible_batch():
+    """Shard-divisibility is a ValueError (asserts vanish under python -O)
+    and names the offending values."""
+    cfg = LoaderConfig(vocab_size=64, global_batch=6, seq_len=8, seed=0)
+    with pytest.raises(ValueError, match="global_batch=6.*num_hosts=4"):
+        TokenLoader(cfg, host_id=0, num_hosts=4)
+
+
 def test_loader_labels_shift():
     cfg = LoaderConfig(vocab_size=64, global_batch=2, seq_len=24, seed=1)
     b = TokenLoader(cfg).batch_at(0)

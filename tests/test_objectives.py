@@ -56,6 +56,45 @@ def test_lambda_max_zero_is_optimal(loss):
     assert float(jnp.max(jnp.abs(delta))) > 0
 
 
+def test_unscale_x_maps_back_to_raw_features():
+    """make_problem(normalize=True) carries the column scales; unscale_x
+    must map the normalized-space solution to raw-space coefficients:
+    A_raw @ unscale_x(x) == A_norm @ x."""
+    rng = np.random.default_rng(6)
+    A = jnp.asarray(rng.standard_normal((50, 20)) * rng.uniform(0.1, 10, 20),
+                    jnp.float32)
+    y = jnp.asarray(rng.standard_normal(50), jnp.float32)
+    prob = obj.make_problem(A, y, lam=0.3)
+    assert prob.scales is not None
+    x = jnp.asarray(rng.standard_normal(20), jnp.float32)
+    np.testing.assert_allclose(A @ obj.unscale_x(x, prob.scales),
+                               prob.A @ x, rtol=1e-4, atol=1e-4)
+    # normalize=False => identity mapping
+    raw = obj.make_problem(A, y, lam=0.3, normalize=False)
+    assert raw.scales is None
+    np.testing.assert_array_equal(np.asarray(obj.unscale_x(x, raw.scales)),
+                                  np.asarray(x))
+
+
+@pytest.mark.parametrize("loss", [obj.LASSO, obj.LOGISTIC])
+def test_masked_data_loss_matches_kernel_copy(loss):
+    """The Pallas kernels keep an import-independent copy of the masked
+    objective (shotgun_block._round_objective, 'keep the two in sync') —
+    pin the two against each other so drift fails loudly."""
+    from repro.kernels.shotgun_block import _round_objective
+    rng = np.random.default_rng(7)
+    n, d = 64, 24
+    z = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    y = jnp.asarray(np.sign(rng.standard_normal(n)) if loss == obj.LOGISTIC
+                    else rng.standard_normal(n), jnp.float32)
+    mask = jnp.asarray(rng.random(n) < 0.8, jnp.float32)
+    x = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    lam = jnp.float32(0.37)
+    want = obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
+    got = _round_objective(z, y, mask, x, lam, loss)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-6, atol=1e-6)
+
+
 def test_dup_equivalence():
     """Eq. 4's duplicated-feature objective agrees with the signed form."""
     A, y, _ = syn.sparco(seed=4, n=40, d=20)

@@ -82,6 +82,54 @@ def test_divergence_past_pstar():
     assert bool(diverged(res.trace.objective))
 
 
+def _dup_solve_recompute(dp, key, P, rounds):
+    """Pre-fix reference for shotgun_dup_solve: identical updates but z is
+    recomputed from scratch (O(n·d)) after the clip each round — the
+    behaviour the incremental maintained-Ax version must reproduce."""
+    A, y, lam, beta = dp.A, dp.y, dp.lam, dp.beta
+    d = A.shape[1]
+    d2 = 2 * d
+    xhat = jnp.zeros(d2, A.dtype)
+    z = jnp.zeros(A.shape[0], A.dtype)
+    fs = []
+    for key_t in jax.random.split(key, rounds):
+        idx = jax.random.randint(key_t, (P,), 0, d2)
+        r = obj.residual_like(z, y, dp.loss)
+        sign = jnp.where(idx < d, 1.0, -1.0)
+        Ap = A[:, idx % d] * sign[None, :]
+        g = Ap.T @ r + lam
+        delta = jnp.maximum(-xhat[idx], -g / beta)
+        xhat = jnp.maximum(xhat.at[idx].add(delta), 0.0)
+        z = A @ (xhat[:d] - xhat[d:])
+        fs.append(float(obj.data_loss_from_margin(z, y, dp.loss)
+                        + lam * jnp.sum(xhat)))
+    return xhat, z, np.array(fs)
+
+
+def test_dup_maintained_margin_matches_recompute():
+    """The incremental z (scatter + clip-correction scatter) must track the
+    recompute-from-scratch trajectory bitwise-up-to-fp, including rounds
+    where the multiset collides and the clip is active (P ≫ d forces
+    duplicate draws)."""
+    A, y, _ = syn.sparco(seed=7, n=60, d=12)
+    prob = obj.make_problem(A, y, lam=0.2)
+    dp = obj.dup_from(prob)
+    P, rounds = 16, 400   # P > d2/2: collisions every round
+    res = shotgun_dup_solve(dp, jax.random.PRNGKey(0), P=P, rounds=rounds)
+    xhat_ref, z_ref, f_ref = _dup_solve_recompute(
+        dp, jax.random.PRNGKey(0), P, rounds)
+    np.testing.assert_allclose(np.asarray(res.trace.objective), f_ref,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(xhat_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.z), np.asarray(z_ref),
+                               rtol=1e-3, atol=1e-3)
+    # the maintained margin cannot drift from A x
+    np.testing.assert_allclose(
+        np.asarray(res.z),
+        np.asarray(prob.A @ obj.dup_to_signed(res.x)), rtol=1e-3, atol=1e-3)
+
+
 def test_maintained_margin_consistency():
     """z returned by the solver must equal A @ x (the maintained-Ax trick
     cannot drift)."""

@@ -1,0 +1,225 @@
+"""Blocked-CSC sparse data path (DESIGN §8): container/ops correctness,
+sparse Pallas kernels vs the dense oracles, and dense-vs-sparse solver
+equivalence (same key => same trajectory) across the stack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as obj
+from repro.core.shotgun import shotgun_solve
+from repro.core.spectral import spectral_radius
+from repro.data import synthetic as syn
+from repro.data.sparse import BlockedCSC, pad_feature_blocks
+from repro.kernels import ops, ref
+from repro.kernels.shotgun_sparse import (sparse_gather_block_matvec,
+                                          sparse_scatter_block_update)
+
+
+def _pair(seed=0, n=256, d=512, density=0.02, category="sparse_imaging"):
+    gen = getattr(syn, category)
+    Ad, y, _ = gen(seed=seed, n=n, d=d, density=density)
+    S, y2, _ = gen(seed=seed, n=n, d=d, density=density, layout="bcsc")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+    return Ad, S, y
+
+
+# ---------------------------------------------------------------------------
+# Container + linear-op seam
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("category", ["sparse_imaging", "large_sparse"])
+def test_bcsc_roundtrip_and_layout_identity(category):
+    """layout='bcsc' packs exactly the matrix the dense layout returns."""
+    Ad, S, _ = _pair(category=category)
+    np.testing.assert_array_equal(np.asarray(S.to_dense()), Ad)
+    assert S.shape == Ad.shape
+    assert S.tile % 8 == 0 and S.d_pad % S.block == 0
+    # padding slots are additive identities
+    assert int(S.nnz) == int((Ad != 0).sum())
+
+
+def test_bcsc_rejects_undersized_tile():
+    Ad, _, _ = _pair()
+    with pytest.raises(ValueError):
+        BlockedCSC.from_dense(Ad, tile=1)
+
+
+def test_bcsc_linear_ops_match_dense():
+    Ad, S, _ = _pair()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(S.d), jnp.float32)
+    r = jnp.asarray(rng.standard_normal(S.n), jnp.float32)
+    np.testing.assert_allclose(np.asarray(obj.matvec(S, x)), Ad @ x,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(obj.rmatvec(S, r)), Ad.T @ r,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S.col_norms()),
+                               np.linalg.norm(Ad, axis=0), rtol=1e-5, atol=1e-5)
+
+
+def test_bcsc_gather_cols_pack():
+    Ad, S, _ = _pair()
+    rng = np.random.default_rng(2)
+    idx = jnp.asarray(rng.integers(0, S.d, 7), jnp.int32)
+    r = jnp.asarray(rng.standard_normal(S.n), jnp.float32)
+    delta = jnp.asarray(rng.standard_normal(7), jnp.float32)
+    z = jnp.asarray(rng.standard_normal(S.n), jnp.float32)
+    cols = obj.gather_cols(S, idx)
+    dense_cols = obj.gather_cols(jnp.asarray(Ad), idx)
+    np.testing.assert_allclose(np.asarray(obj.cols_rmatvec(cols, r)),
+                               np.asarray(obj.cols_rmatvec(dense_cols, r)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(obj.cols_matvec_add(cols, delta, z)),
+        np.asarray(obj.cols_matvec_add(dense_cols, delta, z)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_problem_consumers_run_unchanged_on_bcsc():
+    """normalize_columns / lambda_max / spectral_radius / objective all run
+    on the container and agree with the dense path."""
+    Ad, S, y = _pair()
+    pd = obj.make_problem(Ad, y, lam=0.5)
+    ps = obj.make_problem(S, y, lam=0.5)
+    np.testing.assert_allclose(np.asarray(ps.scales), np.asarray(pd.scales),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(obj.lambda_max(ps.A, y, ps.loss)),
+                               float(obj.lambda_max(pd.A, y, pd.loss)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(spectral_radius(ps.A)),
+                               float(spectral_radius(pd.A)), rtol=1e-4)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(S.d), jnp.float32)
+    np.testing.assert_allclose(float(obj.objective(x, ps)),
+                               float(obj.objective(x, pd)), rtol=1e-4)
+
+
+def test_pad_feature_blocks_zero_tail():
+    _, S, _ = _pair()
+    Sp = pad_feature_blocks(S, 3)
+    assert Sp.nblk % 3 == 0
+    assert float(jnp.abs(Sp.vals[S.nblk:]).sum()) == 0.0
+    assert pad_feature_blocks(Sp, 3) is Sp
+
+
+# ---------------------------------------------------------------------------
+# Sparse Pallas kernels vs dense oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [1, 3])
+def test_sparse_gather_kernel_matches_dense_ref(K):
+    Ad, S, _ = _pair(seed=4)
+    r = jnp.asarray(np.random.default_rng(5).standard_normal(S.n), jnp.float32)
+    blk = jax.random.choice(jax.random.PRNGKey(6), S.nblk, (K,), replace=False)
+    got = sparse_gather_block_matvec(S.rows, S.vals, r, blk, interpret=True)
+    want = ref.gather_block_matvec_ref(jnp.asarray(Ad), r, blk, S.block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("K", [1, 3])
+def test_sparse_scatter_kernel_matches_dense_ref(K):
+    Ad, S, _ = _pair(seed=7)
+    rng = np.random.default_rng(8)
+    z = jnp.asarray(rng.standard_normal(S.n), jnp.float32)
+    delta = jnp.asarray(rng.standard_normal((K, S.block)) * 0.1, jnp.float32)
+    blk = jax.random.choice(jax.random.PRNGKey(9), S.nblk, (K,), replace=False)
+    got = sparse_scatter_block_update(S.rows, S.vals, z, blk, delta,
+                                      interpret=True)
+    want = ref.scatter_block_update_ref(jnp.asarray(Ad), z, blk, delta, S.block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Solver-level equivalence: same key => same trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("category", ["sparse_imaging", "large_sparse"])
+def test_sparse_shotgun_matches_dense_trajectory(category):
+    Ad, S, y = _pair(category=category)
+    pd = obj.make_problem(Ad, y, lam=0.5)
+    ps = obj.make_problem(S, y, lam=0.5)
+    rd = shotgun_solve(pd, jax.random.PRNGKey(0), P=8, rounds=300)
+    rs = shotgun_solve(ps, jax.random.PRNGKey(0), P=8, rounds=300)
+    np.testing.assert_allclose(np.asarray(rs.trace.objective),
+                               np.asarray(rd.trace.objective),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(rs.x), np.asarray(rd.x),
+                               rtol=1e-3, atol=1e-3)
+    # acceptance: objective parity well under 1%
+    f_d, f_s = float(rd.trace.objective[-1]), float(rs.trace.objective[-1])
+    assert abs(f_s - f_d) / abs(f_d) < 0.01
+
+
+@pytest.mark.parametrize("category", ["sparse_imaging", "large_sparse"])
+def test_sparse_block_solver_matches_dense_trajectory(category):
+    """The sparse Pallas path draws the same blocks for the same key as the
+    dense two-kernel path, so whole trajectories coincide."""
+    Ad, S, y = _pair(category=category)
+    pd = obj.make_problem(Ad, y, lam=0.5)
+    ps = obj.make_problem(S, y, lam=0.5)
+    rd = ops.block_shotgun_solve(pd, jax.random.PRNGKey(1), K=2, rounds=80,
+                                 interpret=True)
+    rs = ops.block_shotgun_solve(ps, jax.random.PRNGKey(1), K=2, rounds=80,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(rs.trace.objective),
+                               np.asarray(rd.trace.objective),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(rs.x), np.asarray(rd.x),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_sparse_block_solver_rejects_fused():
+    _, S, y = _pair()
+    ps = obj.make_problem(S, y, lam=0.5)
+    with pytest.raises(ValueError):
+        ops.block_shotgun_solve(ps, jax.random.PRNGKey(0), K=2, rounds=8,
+                                fused=True)
+
+
+def test_sparse_warm_start_threads_through():
+    """x0 warm start (λ-continuation) initializes z = A x0 on the sparse
+    path exactly as on the dense one."""
+    Ad, S, y = _pair()
+    pd = obj.make_problem(Ad, y, lam=0.5)
+    ps = obj.make_problem(S, y, lam=0.5)
+    x0 = np.asarray(shotgun_solve(pd, jax.random.PRNGKey(2), P=8,
+                                  rounds=200).x)
+    rd = ops.block_shotgun_solve(pd, jax.random.PRNGKey(3), K=2, rounds=40,
+                                 interpret=True, x0=jnp.asarray(x0))
+    rs = ops.block_shotgun_solve(ps, jax.random.PRNGKey(3), K=2, rounds=40,
+                                 interpret=True, x0=jnp.asarray(x0))
+    np.testing.assert_allclose(np.asarray(rs.trace.objective),
+                               np.asarray(rd.trace.objective),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_sparse_path_continuation():
+    """solve_path runs unchanged on a BlockedCSC problem (scalar solver)."""
+    from repro.core.path import solve_path
+    _, S, y = _pair()
+    ps = obj.make_problem(S, y, lam=0.5)
+    path = solve_path(ps, jax.random.PRNGKey(0), lam_target=0.5, P=8,
+                      rounds_per_lambda=100, num_lambdas=4)
+    assert np.isfinite(path.objectives).all()
+    assert path.x.shape == (S.d,)
+
+
+def test_sparse_engine_single_shard_matches_block_solver():
+    """sharded sparse_block engine on a 1-shard mesh draws the same blocks
+    as the single-device sparse solver (DESIGN §3 trace equivalence)."""
+    from repro.core.sharded import make_feature_mesh, shotgun_sharded_solve
+    _, S, y = _pair()
+    ps = obj.make_problem(S, y, lam=0.5)
+    mesh = make_feature_mesh(jax.devices()[:1])
+    rounds = 40
+    r_blk = ops.block_shotgun_solve(ps, jax.random.PRNGKey(4), K=2,
+                                    rounds=rounds, interpret=True)
+    r_sh = shotgun_sharded_solve(ps, jax.random.PRNGKey(4), rounds=rounds,
+                                 engine="sparse_block", K=2, mesh=mesh,
+                                 trace_every=rounds)
+    np.testing.assert_allclose(float(r_sh.trace.objective[-1]),
+                               float(r_blk.trace.objective[-1]), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(r_sh.x), np.asarray(r_blk.x),
+                               rtol=1e-3, atol=1e-3)
