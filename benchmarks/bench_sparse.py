@@ -1,21 +1,31 @@
 """Dense vs blocked-CSC Shotgun benchmark (DESIGN §8): wall time and HBM
-traffic of the two data paths on the paper's Large-Sparse category at
+traffic of the data paths on the paper's Large-Sparse category at
 n=2048, d=16384, density=0.002 — the shape whose dense form is what makes
-``large_sparse`` memory-bound before the solver starts.
+``large_sparse`` memory-bound before the solver starts — plus one larger
+sparse-only point at d=65536 where the dense design (512 MB) is no longer
+worth materializing.
 
-Two comparisons per shape:
+Comparisons per shape:
 
   * scalar Shotgun round (P = K·128 sampled coordinates): dense column
     gather A[:, idx] vs the O(tile·P) nnz-tile pack;
   * two-kernel Pallas Block-Shotgun round: streamed (n × 128) dense blocks
-    vs the (tile × 128) rows/vals tiles of ``kernels/shotgun_sparse.py``.
+    vs the (tile × 128) rows/vals tiles of ``kernels/shotgun_sparse.py``;
+  * fused multi-round rounds (R rounds per launch, margin in VMEM): the
+    dense §4.2 kernel vs the sparse §8.3 kernel — the composition this
+    bench exists to track, reported as
+    ``speedup_fused_sparse_vs_block_sparse`` so the trajectory in
+    BENCH_kernels.json is directly comparable across PRs.
 
-Interpret-mode timings (CPU container) — per the §4.4 cost model the
+Interpret-mode timings (CPU container) — per the §4.4/§8.3 cost model the
 interpret cost scales with the bytes each grid step touches, so the
-tile-vs-column ratio shows up directly; the analytic HBM model
-(``roofline.sparse_round_model``) carries the TPU claim.  Appends rows
+tile-vs-column ratio and the K-vs-2K grid-step ratio show up directly; the
+analytic HBM model (``roofline.sparse_round_model``) carries the TPU claim,
+and the bench asserts the measured wall-time ordering matches the model's
+HBM-byte ordering (fused-sparse < two-kernel-sparse < dense).  Appends rows
 tagged ``"bench": "sparse"`` to the repo-root ``BENCH_kernels.json`` on
-full runs; BENCH_SMOKE=1 shrinks the shape and leaves the artifact alone.
+full runs; BENCH_SMOKE=1 shrinks the shape (still exercising the
+fused-sparse config) and leaves the artifact alone.
 """
 from __future__ import annotations
 
@@ -30,62 +40,106 @@ from repro.core import objectives as obj
 from repro.core.shotgun import shotgun_solve
 from repro.data import synthetic as syn
 from repro.kernels import ops
+from repro.kernels.shotgun_block import fused_shotgun_rounds
+from repro.kernels.shotgun_sparse import fused_sparse_shotgun_rounds
 
 K = 4
+R = 8    # fused rounds per launch
 
 
 def run() -> list[dict]:
     smoke = bool(os.environ.get("BENCH_SMOKE"))
-    shapes = ([(256, 1024, 0.02)] if smoke
-              else [(2048, 16384, 0.002)])
+    # (n, d, density, with_dense): the d=65536 point is sparse-only — its
+    # dense form is 512 MB and the dense kernels would dominate the run.
+    shapes = ([(256, 1024, 0.02, True)] if smoke
+              else [(2048, 16384, 0.002, True), (2048, 65536, 0.002, False)])
     rows = []
-    for (n, d, density) in shapes:
-        Ad, y, _ = syn.large_sparse(seed=0, n=n, d=d, density=density)
-        S, _, _ = syn.large_sparse(seed=0, n=n, d=d, density=density,
+    for (n, d, density, with_dense) in shapes:
+        S, y, _ = syn.large_sparse(seed=0, n=n, d=d, density=density,
                                    layout="bcsc")
-        pd = obj.make_problem(Ad, y, lam=0.5)
         ps = obj.make_problem(S, y, lam=0.5)
 
-        # scalar solver: identical round math, different column gather
-        us_scalar_dense = time_us(lambda: shotgun_solve(
-            pd, jax.random.PRNGKey(0), P=K * 128, rounds=1))
-        us_scalar_sparse = time_us(lambda: shotgun_solve(
-            ps, jax.random.PRNGKey(0), P=K * 128, rounds=1))
-
-        # Pallas round: dense two-kernel vs sparse nnz-tile counterpart
-        Ap, yp, mask = ops.pad_problem(pd.A, pd.y)
-        x = jnp.zeros(Ap.shape[1])
-        z = jnp.zeros(Ap.shape[0])
-        blk = jnp.arange(K, dtype=jnp.int32)
-        us_blk_dense = time_us(lambda: ops.block_shotgun_round(
-            Ap, z, x, blk, pd.lam, pd.beta, yp, mask, interpret=True))
-
         rows_t, vals_t = ps.A.rows, ps.A.vals
-        xs = jnp.zeros(rows_t.shape[0] * 128)
+        nblk = rows_t.shape[0]
+        xs = jnp.zeros(nblk * 128)
         zs = jnp.zeros(n)
+        blk = jnp.arange(K, dtype=jnp.int32)
+        idx_rk = (jnp.arange(R * K, dtype=jnp.int32) % nblk).reshape(R, K)
+
+        # two-kernel sparse round vs R fused sparse rounds in one launch
         us_blk_sparse = time_us(lambda: ops.sparse_block_shotgun_round(
             rows_t, vals_t, zs, xs, blk, ps.lam, ps.beta, ps.y,
             interpret=True))
+        us_fused_sparse = time_us(lambda: fused_sparse_shotgun_rounds(
+            rows_t, vals_t, zs, xs, idx_rk, ps.lam, ps.beta, ps.y,
+            interpret=True)) / R
 
-        model = sparse_round_model(n, d, K, tile=ps.A.tile)
-        rows.append({
+        model = sparse_round_model(n, d, K, tile=ps.A.tile, R=R)
+        assert (model["sparse_fused"]["bytes"] < model["sparse"]["bytes"]
+                < model["dense"]["bytes"]), model
+        if not smoke:
+            # measured wall ordering must match the model's HBM-byte
+            # ordering (smoke shapes on the 2-core container are noise)
+            assert us_fused_sparse < us_blk_sparse, (us_fused_sparse,
+                                                     us_blk_sparse)
+        row = {
             "bench": "sparse", "n": n, "d": d, "density": density,
             "K": K, "P_eff": K * 128, "tile": int(ps.A.tile),
-            "scalar_round_us_dense": round(us_scalar_dense, 1),
-            "scalar_round_us_bcsc": round(us_scalar_sparse, 1),
-            "block_round_us_dense": round(us_blk_dense, 1),
+            "rounds_per_launch": R,
             "block_round_us_bcsc": round(us_blk_sparse, 1),
-            "speedup_scalar": round(us_scalar_dense / us_scalar_sparse, 2),
-            "speedup_block": round(us_blk_dense / us_blk_sparse, 2),
+            "fused_round_us_bcsc": round(us_fused_sparse, 1),
+            "speedup_fused_sparse_vs_block_sparse":
+                round(us_blk_sparse / us_fused_sparse, 2),
             "hbm_bytes_per_round_dense": model["dense"]["bytes"],
             "hbm_bytes_per_round_bcsc": model["sparse"]["bytes"],
+            "hbm_bytes_per_round_fused_bcsc":
+                round(model["sparse_fused"]["bytes"]),
             "hbm_bytes_ratio": round(model["hbm_bytes_ratio"], 1),
+            "hbm_bytes_ratio_fused": round(model["hbm_bytes_ratio_fused"], 1),
             "storage_bytes_dense": model["storage_bytes_dense"],
             "storage_bytes_bcsc": model["storage_bytes_bcsc"],
-        })
+        }
+
+        if with_dense:
+            Ad, yd, _ = syn.large_sparse(seed=0, n=n, d=d, density=density)
+            pd = obj.make_problem(Ad, yd, lam=0.5)
+
+            # scalar solver: identical round math, different column gather
+            us_scalar_dense = time_us(lambda: shotgun_solve(
+                pd, jax.random.PRNGKey(0), P=K * 128, rounds=1))
+            us_scalar_sparse = time_us(lambda: shotgun_solve(
+                ps, jax.random.PRNGKey(0), P=K * 128, rounds=1))
+
+            # dense Pallas rounds: two-kernel and R fused rounds per launch
+            Ap, yp, mask = ops.pad_problem(pd.A, pd.y)
+            x = jnp.zeros(Ap.shape[1])
+            z = jnp.zeros(Ap.shape[0])
+            us_blk_dense = time_us(lambda: ops.block_shotgun_round(
+                Ap, z, x, blk, pd.lam, pd.beta, yp, mask, interpret=True))
+            us_fused_dense = time_us(lambda: fused_shotgun_rounds(
+                Ap, z, x, idx_rk, pd.lam, pd.beta, yp, mask,
+                interpret=True)) / R
+
+            row.update({
+                "scalar_round_us_dense": round(us_scalar_dense, 1),
+                "scalar_round_us_bcsc": round(us_scalar_sparse, 1),
+                "block_round_us_dense": round(us_blk_dense, 1),
+                "fused_round_us_dense": round(us_fused_dense, 1),
+                "speedup_scalar":
+                    round(us_scalar_dense / us_scalar_sparse, 2),
+                "speedup_block": round(us_blk_dense / us_blk_sparse, 2),
+                "speedup_fused_sparse_vs_dense_fused":
+                    round(us_fused_dense / us_fused_sparse, 2),
+            })
+            if not smoke:
+                assert us_blk_sparse < us_blk_dense, row
+
+        rows.append(row)
         print(f"sparse,n={n},d={d},density={density},tile={int(ps.A.tile)},"
-              f"scalar={us_scalar_dense:.0f}us->{us_scalar_sparse:.0f}us,"
-              f"block={us_blk_dense:.0f}us->{us_blk_sparse:.0f}us", flush=True)
+              f"block_bcsc={us_blk_sparse:.0f}us,"
+              f"fused_bcsc={us_fused_sparse:.0f}us,"
+              f"speedup_fused_vs_block="
+              f"{us_blk_sparse / us_fused_sparse:.2f}", flush=True)
 
     emit(rows, "bench_sparse")
     if not smoke:

@@ -46,26 +46,40 @@ def shotgun_round_model(n, d, K, block=128, a_bytes=4, fused_single=None):
     return rows
 
 
-def sparse_round_model(n, d, K, tile, block=128):
-    """Per-round HBM bytes/flops of the two-kernel Block-Shotgun round on a
+def sparse_round_model(n, d, K, tile, block=128, R=8):
+    """Per-round HBM bytes/flops of the Block-Shotgun round variants on a
     dense design vs a BlockedCSC one (DESIGN §8).  Sparse tiles carry both
-    int32 row indices and f32 values (8 B/slot); the dense round streams
-    whole (n × block) column blocks twice.  Also reports the at-rest
-    design-matrix footprint — the paper-scale constraint that motivates the
-    container.
+    int32 row indices and f32 values (8 B/slot); the dense two-kernel round
+    streams whole (n × block) column blocks twice.  The fused sparse round
+    (DESIGN §8.3) fetches each selected block's nnz tiles ONCE per round
+    (one grid step serves both gather and scatter) and keeps z/Δz/r/x in
+    VMEM for all ``R`` rounds of a launch, so the z/x vector traffic is
+    amortized over R and the per-launch constant (z0/y in, z/x out, x0 in)
+    is all that remains.  Also reports the at-rest design-matrix footprint
+    — the paper-scale constraint that motivates the container.
     """
     dense = shotgun_round_model(n, d, K, block=block)["two_kernel"]
+    d_pad = -(-d // block) * block
     vec = n * 4
     sp_bytes = 2 * K * tile * block * 8 + 6 * vec + 4 * K * block * 4
     sp_flops = 2 * 2 * K * tile * block          # madd per nnz, each phase
     sparse = {"bytes": sp_bytes, "flops": sp_flops,
               "intensity": sp_flops / sp_bytes,
               "t_mem_us": sp_bytes / HBM_GBPS * 1e6}
+    # fused: one (tile × block) rows+vals fetch per block per round; the
+    # per-launch z0/y input + z output (3 n-vectors) and the two full-
+    # width x transfers (x0 in, x out — 2·d_pad) amortize over R rounds.
+    fu_bytes = K * tile * block * 8 + (3 * vec + 2 * d_pad * 4) / R
+    fu_flops = 2 * 2 * K * tile * block          # same madds, one fetch
+    fused = {"bytes": fu_bytes, "flops": fu_flops,
+             "intensity": fu_flops / fu_bytes,
+             "t_mem_us": fu_bytes / HBM_GBPS * 1e6}
     return {
-        "dense": dense, "sparse": sparse,
+        "dense": dense, "sparse": sparse, "sparse_fused": fused,
         "hbm_bytes_ratio": dense["bytes"] / sp_bytes,
+        "hbm_bytes_ratio_fused": dense["bytes"] / fu_bytes,
         "storage_bytes_dense": 4 * n * d,
-        "storage_bytes_bcsc": 8 * tile * (-(-d // block) * block),
+        "storage_bytes_bcsc": 8 * tile * d_pad,
     }
 
 

@@ -4,8 +4,9 @@ The distributed Shotgun driver (``core/sharded.py``) is a thin shard_map
 loop over a pluggable **round engine**: the per-shard computation "run R
 rounds of coordinate updates against a margin snapshot z, emit the margin
 contribution Δz = A_shard δx" behind one small protocol, so the same driver
-composes the scalar jnp path, the two-kernel Pallas path, and the fused
-multi-round Pallas kernel (DESIGN §4.2) with either merge cadence.
+composes the scalar jnp path, the two-kernel Pallas paths (dense and
+BlockedCSC), and the fused multi-round Pallas kernels (dense §4.2, sparse
+§8.3) with either merge cadence.
 
 Protocol (all engines are hashable NamedTuples so they can ride through
 ``jax.jit`` as static configuration; the driver owns iterate init,
@@ -42,7 +43,7 @@ import jax.numpy as jnp
 
 from repro.core import objectives as obj
 
-ENGINE_NAMES = ("scalar", "block", "fused", "sparse_block")
+ENGINE_NAMES = ("scalar", "block", "fused", "sparse_block", "sparse_fused")
 
 
 class ScalarEngine(NamedTuple):
@@ -180,6 +181,35 @@ class SparseBlockEngine(NamedTuple):
         return x_l, dz
 
 
+class SparseFusedEngine(NamedTuple):
+    """Fused multi-round sparse engine for BlockedCSC designs (DESIGN §8.3):
+    all R rounds of a merge window in ONE ``pallas_call`` with the shard's
+    live local margin view AND the Δz accumulator resident in VMEM,
+    streaming only the selected (tile, 128) nnz tiles
+    (``fused_sparse_shotgun_delta_rounds``).  Like ``SparseBlockEngine``,
+    ``A_blk`` arrives as a column-sharded ``BlockedCSC`` and only its raw
+    rows/vals tiles are read (block width included — no ``block`` field);
+    the sample mask is ignored (the sparse path never pads samples)."""
+
+    K: int
+    loss: str
+    interpret: bool = True
+
+    fold_always = False
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+        from repro.kernels.shotgun_sparse import (
+            fused_sparse_shotgun_delta_rounds)
+        rows, vals = A_blk.rows, A_blk.vals
+        nblk = rows.shape[0]
+        draw = lambda kt: jax.random.choice(kt, nblk, (self.K,),
+                                            replace=False)
+        idx = jax.vmap(draw)(keys).astype(jnp.int32)
+        return fused_sparse_shotgun_delta_rounds(
+            rows, vals, z, x_l, idx, lam, beta, y, loss=self.loss,
+            interpret=self.interpret)
+
+
 def make_engine(name: str, *, loss: str, P_local: int = 8, K: int = 2,
                 block: int = 128, tile_n: int | None = None,
                 interpret: bool = True):
@@ -194,4 +224,6 @@ def make_engine(name: str, *, loss: str, P_local: int = 8, K: int = 2,
     if name == "sparse_block":
         return SparseBlockEngine(K=K, loss=loss, block=block,
                                  interpret=interpret)
+    if name == "sparse_fused":
+        return SparseFusedEngine(K=K, loss=loss, interpret=interpret)
     raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_NAMES}")

@@ -203,9 +203,11 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
 
     engine      "scalar" (P = P_local × shards coordinate updates/round),
                 "block" / "fused" (P = K × 128 × shards via the Pallas
-                kernels; ``interpret=True`` on CPU), "sparse_block"
-                (same P but over a BlockedCSC design via the nnz-tile
-                kernels, DESIGN §8 — column blocks sharded on nblk).
+                kernels; ``interpret=True`` on CPU), "sparse_block" /
+                "sparse_fused" (same P but over a BlockedCSC design via the
+                nnz-tile kernels, DESIGN §8 — column blocks sharded on
+                nblk; "sparse_fused" keeps the margin view and Δz in VMEM
+                for the whole merge window, DESIGN §8.3).
     merge       "round" — one Δz psum per round (no staleness);
                 "launch" — ``rounds_per_launch`` stale rounds per merge.
     x0          optional warm start (λ-continuation); zero-padded and
@@ -228,10 +230,10 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
     nshards = mesh.devices.size
     merge_rounds = 1 if merge == "round" else rounds_per_launch
 
-    if engine == "sparse_block":
+    if engine in ("sparse_block", "sparse_fused"):
         if not isinstance(prob.A, BlockedCSC):
             raise ValueError(
-                "engine='sparse_block' needs a BlockedCSC design; got "
+                f"engine={engine!r} needs a BlockedCSC design; got "
                 f"{type(prob.A).__name__} (use data.sparse.BlockedCSC."
                 "from_dense or a layout='bcsc' generator)")
         A = pad_feature_blocks(prob.A, nshards)
@@ -246,7 +248,7 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
     elif isinstance(prob.A, BlockedCSC):
         raise ValueError(
             f"engine={engine!r} needs a dense design; BlockedCSC problems "
-            "use engine='sparse_block'")
+            "use engine='sparse_block' or 'sparse_fused'")
     elif engine == "scalar":
         A, y = pad_features(prob.A, nshards), prob.y
         mask = jnp.ones(prob.n, jnp.float32)

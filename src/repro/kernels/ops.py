@@ -16,8 +16,10 @@ On CPU (this container) pass ``interpret=True``; on TPU the same code path
 compiles to Mosaic.  ``ref.py`` holds the pure-jnp oracles used by the tests.
 
 ``block_shotgun_solve`` also accepts ``BlockedCSC`` problems (DESIGN §8):
-the round scan then runs the nnz-tile kernels from ``shotgun_sparse.py``
-(same block draws for the same key; ``fused=True`` is dense-only).
+the round scan then runs the nnz-tile kernels from ``shotgun_sparse.py``,
+and ``fused=True`` scans over launches of ``fused_sparse_shotgun_rounds``
+(DESIGN §8.3) — same block draws as the dense path for the same key in
+both modes, so all four trajectories coincide.
 """
 from __future__ import annotations
 
@@ -34,7 +36,9 @@ from repro.kernels.shotgun_block import (BLOCK, TILE_N, auto_tile_n,
                                          fused_shotgun_rounds,
                                          gather_block_matvec,
                                          scatter_block_update)
-from repro.kernels.shotgun_sparse import (sparse_gather_block_matvec,
+from repro.kernels.shotgun_sparse import (block_delta,
+                                          fused_sparse_shotgun_rounds,
+                                          sparse_gather_block_matvec,
                                           sparse_scatter_block_update)
 
 
@@ -138,8 +142,7 @@ def sparse_block_shotgun_round(rows, vals, z, x, blk_idx, lam, beta, y,
                                    interpret=interpret)
     xb = x.reshape(nblk, block)
     x_sel = jnp.take(xb, blk_idx, axis=0)
-    x_new_sel = obj.soft_threshold(x_sel - g / beta, lam / beta)
-    delta = x_new_sel - x_sel
+    delta = block_delta(x_sel, g, lam, beta)
     z_new = sparse_scatter_block_update(rows, vals, z, blk_idx, delta,
                                         interpret=interpret)
     xb = xb.at[blk_idx].add(delta)
@@ -178,6 +181,41 @@ def _sparse_solve(rows, vals, y, lam, beta, key, K, rounds, loss, interpret,
     return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
 
 
+@functools.partial(jax.jit, static_argnames=("K", "rounds", "R", "loss",
+                                             "interpret"))
+def _fused_sparse_solve(rows, vals, y, lam, beta, key, K, rounds, R, loss,
+                        interpret, x0=None):
+    """Scan over launches of the fused sparse kernel: one pallas_call per R
+    rounds (DESIGN §8.3).
+
+    Draws the same per-round keys/indices as ``_sparse_solve`` (and hence
+    the dense ``_solve``/``_fused_solve``) for the same key, so all four
+    trajectories coincide.
+    """
+    nblk, tile, block = rows.shape
+    n = y.shape[0]
+    L = rounds // R
+    x0 = (jnp.zeros(nblk * block, jnp.float32) if x0 is None
+          else x0.astype(jnp.float32))
+    z0 = bcsc_matvec(rows, vals, x0, n)
+    draw = functools.partial(jax.random.choice, a=nblk, shape=(K,),
+                             replace=False)
+
+    def launch_fn(carry, keys_l):
+        x, z = carry
+        idx = jax.vmap(lambda kt: draw(kt))(keys_l).astype(jnp.int32)
+        x, z, fs, nnzs = fused_sparse_shotgun_rounds(
+            rows, vals, z, x, idx, lam, beta, y, loss=loss,
+            interpret=interpret)
+        return (x, z), (fs, nnzs)
+
+    keys = jax.random.split(key, rounds).reshape(L, R, -1)
+    (x, z), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0), keys)
+    return Result(x=x, z=z,
+                  trace=Trace(objective=fs.reshape(rounds),
+                              nnz=nnzs.reshape(rounds)))
+
+
 def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
                         block: int = BLOCK, interpret: bool = True,
                         fused: bool = False, rounds_per_launch: int = 8,
@@ -199,22 +237,31 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
 
     A ``BlockedCSC`` problem routes to the sparse kernels
     (``kernels/shotgun_sparse.py``): same block draws for the same key, so
-    the trajectory matches the dense path on the densified design.  The
-    fused multi-round kernel has no sparse variant yet (its VMEM dataflow
-    assumes streamed dense blocks), so ``fused=True`` raises.
+    the trajectory matches the dense path on the densified design.
+    ``fused=True`` runs the fused multi-round sparse kernel (DESIGN §8.3)
+    — one launch per ``rounds_per_launch`` rounds with the margin resident
+    in VMEM and nnz tiles as the only per-round A traffic; ``tile_n`` is
+    ignored (the sparse kernels never tile the sample dimension).
     """
     if isinstance(prob.A, BlockedCSC):
-        if fused:
-            raise ValueError("fused=True is not supported for BlockedCSC "
-                             "problems; use the two-kernel sparse path")
         if block != prob.A.block:
             raise ValueError(f"block={block} != BlockedCSC block "
                              f"{prob.A.block}")
         if x0 is not None:
             x0 = jnp.pad(jnp.asarray(x0), (0, prob.A.d_pad - prob.d))
-        res = _sparse_solve(prob.A.rows, prob.A.vals, prob.y, prob.lam,
-                            prob.beta, key, K, rounds, prob.loss, interpret,
-                            x0=x0)
+        if fused:
+            if rounds % rounds_per_launch:
+                raise ValueError(
+                    f"rounds={rounds} not divisible by "
+                    f"rounds_per_launch={rounds_per_launch}")
+            res = _fused_sparse_solve(prob.A.rows, prob.A.vals, prob.y,
+                                      prob.lam, prob.beta, key, K, rounds,
+                                      rounds_per_launch, prob.loss,
+                                      interpret, x0=x0)
+        else:
+            res = _sparse_solve(prob.A.rows, prob.A.vals, prob.y, prob.lam,
+                                prob.beta, key, K, rounds, prob.loss,
+                                interpret, x0=x0)
         return Result(x=res.x[: prob.d], z=res.z, trace=res.trace)
 
     A, y, mask = pad_problem(prob.A, prob.y)

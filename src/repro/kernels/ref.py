@@ -71,6 +71,51 @@ def fused_shotgun_delta_rounds_ref(A, z, x, blk_idx, lam, beta, y, mask,
     return x_new, z_new - z.astype(jnp.float32)
 
 
+def fused_sparse_shotgun_rounds_ref(rows, vals, z, x, blk_idx, lam, beta, y,
+                                    loss):
+    """Multi-round oracle for ``shotgun_sparse.fused_sparse_shotgun_rounds``
+    — the same trajectory computed from the nnz tiles in pure jnp.
+
+    rows/vals: (nblk, tile, block) BlockedCSC tiles; x: (nblk·block,);
+    blk_idx: (R, K) int32.  Returns (x (nblk·block,) f32, z (n,) f32,
+    f (R,) f32, nnz (R,) int32).
+    """
+    from repro.core import objectives as obj
+    nblk, tile, block = rows.shape
+    x = x.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    ones = jnp.ones_like(y, jnp.float32)
+
+    def round_fn(carry, idx_t):
+        x, z = carry
+        r = obj.residual_like(z, y, loss)
+        rows_k = jnp.take(rows, idx_t, axis=0)              # (K, tile, B)
+        vals_k = jnp.take(vals, idx_t, axis=0).astype(jnp.float32)
+        g = jnp.sum(vals_k * jnp.take(r, rows_k), axis=1)   # (K, B)
+        xb = x.reshape(nblk, block)
+        x_sel = jnp.take(xb, idx_t, axis=0)
+        x_new = obj.soft_threshold(x_sel - g / beta, lam / beta)
+        delta = x_new - x_sel
+        z = z.at[rows_k.reshape(-1)].add(
+            (vals_k * delta[:, None, :]).reshape(-1))
+        x = xb.at[idx_t].add(delta).reshape(-1)
+        f = obj.masked_data_loss(z, y, ones, loss) + lam * jnp.sum(jnp.abs(x))
+        return (x, z), (f, jnp.sum(x != 0))
+
+    (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x, z), blk_idx)
+    return x, z, fs, nnzs.astype(jnp.int32)
+
+
+def fused_sparse_shotgun_delta_rounds_ref(rows, vals, z, x, blk_idx, lam,
+                                          beta, y, loss):
+    """Oracle for ``shotgun_sparse.fused_sparse_shotgun_delta_rounds``: the
+    same multi-round trajectory, reported as (x_new, dz) with
+    dz = z_new − z₀ (the shard's Δz all-reduce contribution)."""
+    x_new, z_new, _, _ = fused_sparse_shotgun_rounds_ref(
+        rows, vals, z, x, blk_idx, lam, beta, y, loss)
+    return x_new, z_new - z.astype(jnp.float32)
+
+
 def block_shotgun_round_ref(A, z, x, blk_idx, lam, beta, y, loss, block: int):
     """One full Block-Shotgun round (oracle for ops.block_shotgun_round)."""
     from repro.core import objectives as obj

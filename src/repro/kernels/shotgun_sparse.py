@@ -1,19 +1,36 @@
 """Pallas Block-Shotgun kernels for BlockedCSC designs (DESIGN §8).
 
-Sparse counterparts of the two dense round kernels in ``shotgun_block.py``.
+Sparse counterparts of the dense round kernels in ``shotgun_block.py``.
 The dense kernels stream whole (tile_n × 128) column blocks of A; at the
 paper's Large-Sparse densities (~0.002) that is ~500× more HBM traffic than
 the nonzeros.  Here a scalar-prefetched block pointer selects the selected
-block's padded nnz tiles instead:
+block's padded (tile, 128) nnz row/value tiles instead, so every kernel
+touches O(tile·128) bytes of A per block instead of O(n·128).
+
+Two single-round kernels (the two-kernel round used by ``ops.py`` and the
+``sparse_block`` engine):
 
   sparse_gather_block_matvec   g_B = A_Bᵀ r     grid (K,): fetch the block's
                                (tile, 128) rows/vals tiles, gather r at the
                                row indices, multiply-accumulate over the
-                               tile axis — O(tile·128) bytes per block vs
-                               O(n·128) dense.
+                               tile axis.
   sparse_scatter_block_update  z += Σ_B A_B δ_B  grid (K,): scatter-add
                                vals·δ into a VMEM-resident f32 z accumulator
                                at the row indices; flushed once per call.
+
+and the fused multi-round kernel (DESIGN §8.3), which composes the nnz-tile
+data path with the §4.2 VMEM-residency dataflow:
+
+  fused_sparse_shotgun_rounds  R rounds in ONE pallas_call.  The margin z,
+  the round-start residual r, the iterate x, and the per-round deltas all
+  live in VMEM scratch across the whole launch; a scalar-prefetched (R, K)
+  block-index matrix selects each grid step's nnz tiles.  Because z is
+  full-length in VMEM (never sample-tiled), every round is "single-phase":
+  one tile fetch per block serves both g_B = A_Bᵀ r and z += A_B δ_B, and
+  the z/r/g/δ HBM round trips of the two-kernel round disappear entirely.
+  ``fused_sparse_shotgun_delta_rounds`` is the shard-local engine variant
+  (DESIGN §3): z is a read-only global snapshot and the kernel additionally
+  accumulates its contributions into a Δz output for the caller's psum.
 
 Padded tile slots hold (row 0, value 0) so they are additive no-ops in both
 directions.  Like the dense kernels these run under ``interpret=True`` on
@@ -31,16 +48,46 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.shotgun_block import BLOCK
+from repro.kernels.shotgun_block import (BLOCK, LASSO, _residual,
+                                         _round_objective, _soft_threshold)
 
+
+# ---------------------------------------------------------------------------
+# Shared per-block update math: the gather/scatter tile bodies and the
+# soft-threshold delta exist ONCE here, used by both the two-kernel round
+# (kernels below + ops.sparse_block_shotgun_round) and the fused round loop.
+# ---------------------------------------------------------------------------
+
+def _tile_gather(rows, vals, r_flat):
+    """g (1, block) = A_Bᵀ r from one (tile, block) nnz tile: gather r at the
+    row indices, multiply-accumulate over the tile axis."""
+    rv = jnp.take(r_flat, rows)                   # (tile, block)
+    return jnp.sum(vals * rv, axis=0, keepdims=True)
+
+
+def _tile_scatter(z_flat, rows, vals, dlt):
+    """z + A_B δ from one nnz tile: scatter-add vals·δ at the row indices.
+    ``z_flat`` (n,) f32, ``dlt`` (1, block); returns the updated (n,)."""
+    contrib = vals * dlt                          # broadcast over tile axis
+    return z_flat.at[rows.reshape(-1)].add(contrib.reshape(-1))
+
+
+def block_delta(x_sel, g, lam, beta):
+    """The per-block Shotgun update δ_B = S(x_B − g_B/β, λ/β) − x_B (Alg. 2
+    soft-threshold step) — shared by ``ops.sparse_block_shotgun_round`` and
+    the fused round loop so the threshold logic exists once."""
+    return _soft_threshold(x_sel - g / beta, lam / beta) - x_sel
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: g[k] = A_{B_k}ᵀ r from nnz tiles
+# ---------------------------------------------------------------------------
 
 def _gather_kernel(idx_ref, rows_ref, vals_ref, r_ref, g_ref):
     # grid = (K,); one selected column block per step.
-    rows = rows_ref[0]                        # (tile, B) int32
-    vals = vals_ref[0].astype(jnp.float32)    # (tile, B)
-    r = r_ref[...].reshape(-1)                # (n,)
-    rv = jnp.take(r, rows)                    # gather, (tile, B)
-    g_ref[...] = jnp.sum(vals * rv, axis=0, keepdims=True)
+    g_ref[...] = _tile_gather(rows_ref[0],
+                              vals_ref[0].astype(jnp.float32),
+                              r_ref[...].reshape(-1))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -74,6 +121,10 @@ def sparse_gather_block_matvec(rows, vals, r, blk_idx,
       r.reshape(n, 1).astype(jnp.float32))
 
 
+# ---------------------------------------------------------------------------
+# Kernel 2: z += Σ_k A_{B_k} δ_k from nnz tiles
+# ---------------------------------------------------------------------------
+
 def _make_scatter_kernel(K: int):
     def kernel(idx_ref, rows_ref, vals_ref, d_ref, z_ref, out_ref, acc_ref):
         k = pl.program_id(0)
@@ -82,14 +133,10 @@ def _make_scatter_kernel(K: int):
         def _init():
             acc_ref[...] = z_ref[...].astype(jnp.float32)
 
-        rows = rows_ref[0]                        # (tile, B)
-        vals = vals_ref[0].astype(jnp.float32)
-        dlt = d_ref[...]                          # (1, B)
-        contrib = vals * dlt                      # broadcast over tile axis
         n = acc_ref.shape[0]
-        z = acc_ref[...].reshape(-1)
-        acc_ref[...] = z.at[rows.reshape(-1)].add(
-            contrib.reshape(-1)).reshape(n, 1)
+        acc_ref[...] = _tile_scatter(
+            acc_ref[...].reshape(-1), rows_ref[0],
+            vals_ref[0].astype(jnp.float32), d_ref[...]).reshape(n, 1)
 
         @pl.when(k == K - 1)
         def _flush():
@@ -130,3 +177,220 @@ def sparse_scatter_block_update(rows, vals, z, blk_idx, delta,
     )(blk_idx.astype(jnp.int32), rows, vals,
       delta.astype(jnp.float32), z.reshape(n, 1).astype(jnp.float32))
     return out.reshape(n).astype(z.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: fused multi-round sparse Shotgun — R rounds per launch, z and
+# the Δz accumulator resident in VMEM, nnz tiles as the only per-round A
+# traffic (DESIGN §8.3).
+# ---------------------------------------------------------------------------
+
+def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
+    """Kernel body factory.  grid = (R, K): one selected column block per
+    step, every round "single-phase" — the step's (tile, block) rows/vals
+    tiles serve both the gradient gather and the margin scatter, so each
+    block's nnz tiles stream exactly once per round.
+
+    ``emit_dz`` selects the shard-local engine variant (DESIGN §3): z0 is a
+    read-only *global* margin snapshot; the kernel still keeps its own live
+    local view z_s = z0 + Σ own contributions in VMEM, but additionally
+    accumulates those contributions into a Δz scratch and outputs (Δz, x)
+    instead of (z, x, f, nnz) — the caller merges Δz across shards (psum)
+    and owns the trace bookkeeping."""
+
+    def kernel(idx_ref, scal_ref, rows_ref, vals_ref, z0_ref, x0_ref, y_ref,
+               *refs):
+        if emit_dz:
+            (dzo_ref, xo_ref, z_s, dz_s, r_s, x_s, d_s) = refs
+        else:
+            (zo_ref, xo_ref, f_ref, nnz_ref, z_s, r_s, x_s, d_s) = refs
+        r_id = pl.program_id(0)
+        k_id = pl.program_id(1)
+        lam = scal_ref[0]
+        beta = scal_ref[1]
+        one = jnp.float32(1.0)       # no sample padding on the sparse path
+
+        @pl.when((r_id == 0) & (k_id == 0))
+        def _init_launch():
+            z_s[...] = z0_ref[...]
+            x_s[...] = x0_ref[...]
+            if emit_dz:
+                dz_s[...] = jnp.zeros_like(dz_s)
+
+        @pl.when(k_id == 0)
+        def _round_start():
+            r_s[...] = _residual(z_s[...], y_ref[...], one, loss)
+
+        rows = rows_ref[0]                        # (tile, block)
+        vals = vals_ref[0].astype(jnp.float32)
+        g = _tile_gather(rows, vals, r_s[...].reshape(-1))    # (1, block)
+        b = idx_ref[r_id, k_id]
+        # All K deltas are taken from the *pre-round* x (the x scratch is
+        # only updated at round end), so duplicate block draws within a
+        # round reproduce Alg. 2's multiset semantics exactly; the gathers
+        # all read the round-start residual r_s, untouched by the scatters.
+        dlt = block_delta(x_s[pl.ds(b, 1), :], g, lam, beta)
+        d_s[pl.ds(k_id, 1), :] = dlt
+        n = z_s.shape[0]
+        z_s[...] = _tile_scatter(z_s[...].reshape(-1), rows, vals,
+                                 dlt).reshape(n, 1)
+        if emit_dz:
+            dz_s[...] = _tile_scatter(dz_s[...].reshape(-1), rows, vals,
+                                      dlt).reshape(n, 1)
+
+        @pl.when(k_id == K - 1)
+        def _round_end():
+            def apply_delta(kk, carry):
+                bb = idx_ref[r_id, kk]
+                x_s[pl.ds(bb, 1), :] += d_s[pl.ds(kk, 1), :]
+                return carry
+
+            jax.lax.fori_loop(0, K, apply_delta, 0)
+            # Constant-index outputs flush to HBM once, after the last grid
+            # step; rewriting them every round is free in VMEM.
+            if emit_dz:
+                dzo_ref[...] = dz_s[...]
+                xo_ref[...] = x_s[...]
+            else:
+                f_ref[0, 0] = _round_objective(z_s[...], y_ref[...], one,
+                                               x_s[...], lam, loss)
+                nnz_ref[0, 0] = jnp.sum((x_s[...] != 0).astype(jnp.int32))
+                zo_ref[...] = z_s[...]
+                xo_ref[...] = x_s[...]
+
+    return kernel
+
+
+def _fused_sparse_call(rows, vals, z, x, blk_idx, lam, beta, y, loss,
+                       interpret, emit_dz):
+    """Shared pallas_call plumbing for both fused-sparse variants."""
+    nblk, tile, block = rows.shape
+    n = z.shape[0]
+    R, K = blk_idx.shape
+
+    idx = blk_idx.astype(jnp.int32)
+    scal = jnp.stack([jnp.asarray(lam, jnp.float32),
+                      jnp.asarray(beta, jnp.float32)])
+    z0 = z.reshape(n, 1).astype(jnp.float32)
+    x0 = x.reshape(nblk, block).astype(jnp.float32)
+    y2 = y.reshape(n, 1).astype(jnp.float32)
+
+    tile_map = lambda r, k, idx, scal: (idx[r, k], 0, 0)
+    const = lambda r, k, idx, scal: (0, 0)
+    f_map = lambda r, k, idx, scal: (r, 0)
+
+    if emit_dz:
+        out_specs = [
+            pl.BlockSpec((n, 1), const),            # Δz
+            pl.BlockSpec((nblk, block), const),     # x
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, block), jnp.float32),
+        ]
+        extra_scratch = [pltpu.VMEM((n, 1), jnp.float32)]   # Δz accumulator
+    else:
+        out_specs = [
+            pl.BlockSpec((n, 1), const),            # z
+            pl.BlockSpec((nblk, block), const),     # x
+            pl.BlockSpec((1, 1), f_map),            # f trace
+            pl.BlockSpec((1, 1), f_map),            # nnz trace
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, block), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        ]
+        extra_scratch = []
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R, K),
+        in_specs=[
+            pl.BlockSpec((1, tile, block), tile_map),  # rows tile
+            pl.BlockSpec((1, tile, block), tile_map),  # vals tile
+            pl.BlockSpec((n, 1), const),               # z0   (VMEM-resident)
+            pl.BlockSpec((nblk, block), const),        # x0   (VMEM-resident)
+            pl.BlockSpec((n, 1), const),               # y    (VMEM-resident)
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),           # z  (live local view)
+        ] + extra_scratch + [
+            pltpu.VMEM((n, 1), jnp.float32),           # r  (round-start res.)
+            pltpu.VMEM((nblk, block), jnp.float32),    # x
+            pltpu.VMEM((K, block), jnp.float32),       # delta
+        ],
+    )
+    return pl.pallas_call(
+        _make_fused_sparse_kernel(loss, K, emit_dz=emit_dz),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(idx, scal, rows, vals, z0, x0, y2)
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "interpret"))
+def fused_sparse_shotgun_rounds(rows, vals, z, x, blk_idx, lam, beta, y,
+                                loss: str = LASSO, interpret: bool = False):
+    """R Block-Shotgun rounds over BlockedCSC tiles in ONE pallas_call.
+
+    rows/vals  (nblk, tile, block) BlockedCSC nnz tiles (DESIGN §8).
+    z          (n,) margin A x;  x (nblk·block,) iterate;  y (n,).
+    blk_idx    (R, K) int32 — round t updates aligned coordinate blocks
+               blk_idx[t, 0..K-1] (duplicates allowed, multiset semantics).
+
+    Returns (x_new (nblk·block,) f32, z_new (n,) f32, f (R,) f32,
+    nnz (R,) int32) with per-round objective/nnz traces computed in-kernel —
+    the same contract as the dense ``fused_shotgun_rounds`` but with
+    O(tile·128) bytes of A per grid step instead of O(n·128).
+    """
+    nblk, tile, block = rows.shape
+    n = z.shape[0]
+    R = blk_idx.shape[0]
+    z_new, x_new, f, nnz = _fused_sparse_call(
+        rows, vals, z, x, blk_idx, lam, beta, y, loss, interpret,
+        emit_dz=False)
+    return (x_new.reshape(nblk * block), z_new.reshape(n),
+            f.reshape(R), nnz.reshape(R))
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "interpret"))
+def fused_sparse_shotgun_delta_rounds(rows, vals, z, x, blk_idx, lam, beta,
+                                      y, loss: str = LASSO,
+                                      interpret: bool = False):
+    """Shard-local fused sparse engine kernel: R rounds against a margin
+    *snapshot* (DESIGN §3).  Same dataflow as ``fused_sparse_shotgun_rounds``
+    but the kernel does not own the global margin: ``z`` is the last merged
+    global snapshot, the live VMEM view tracks only the shard's OWN updates
+    on top of it, and the contributions are additionally accumulated into a
+    Δz = A_shard δx output for the caller to all-reduce.
+
+    Returns (x_new (nblk·block,) f32, dz (n,) f32).
+    """
+    nblk, tile, block = rows.shape
+    n = z.shape[0]
+    dz, x_new = _fused_sparse_call(
+        rows, vals, z, x, blk_idx, lam, beta, y, loss, interpret,
+        emit_dz=True)
+    return x_new.reshape(nblk * block), dz.reshape(n)
+
+
+def fused_sparse_vmem_bytes(n: int, nblk: int, tile: int, K: int,
+                            block: int = BLOCK, emit_dz: bool = False) -> int:
+    """f32/int32 VMEM resident set of the fused sparse kernel (DESIGN §8.3):
+    z/r scratch (+ Δz for the engine variant), the z0/y in- and z out-
+    vectors, the three full-width x buffers (x0/scratch/out), the K-row
+    delta scratch, and the double-buffered (tile, block) rows+vals tile
+    pair.  R never enters — only the (R·K) scalar-prefetch index matrix and
+    the per-round (1, 1) trace outputs scale with R, both negligible — so
+    the tile size (and through it the density) is what bounds the shapes
+    this kernel accepts, not the rounds-per-launch."""
+    # z0-in, y-in, z_s, r_s, plus z-out (margin-owning) or dz_s + dz-out
+    # minus z-out (engine variant): 5 vs 6 n-vectors
+    vecs = (6 if emit_dz else 5) * n * 4
+    xbuf = 3 * nblk * block * 4                    # x0, x_s, x out
+    dbuf = K * block * 4                           # delta scratch
+    tiles = 2 * 2 * tile * block * 4               # rows+vals, double-buffered
+    return vecs + xbuf + dbuf + tiles

@@ -12,7 +12,9 @@ from repro.core.spectral import spectral_radius
 from repro.data import synthetic as syn
 from repro.data.sparse import BlockedCSC, pad_feature_blocks
 from repro.kernels import ops, ref
-from repro.kernels.shotgun_sparse import (sparse_gather_block_matvec,
+from repro.kernels.shotgun_sparse import (fused_sparse_shotgun_delta_rounds,
+                                          fused_sparse_shotgun_rounds,
+                                          sparse_gather_block_matvec,
                                           sparse_scatter_block_update)
 
 
@@ -170,14 +172,6 @@ def test_sparse_block_solver_matches_dense_trajectory(category):
                                rtol=1e-3, atol=1e-3)
 
 
-def test_sparse_block_solver_rejects_fused():
-    _, S, y = _pair()
-    ps = obj.make_problem(S, y, lam=0.5)
-    with pytest.raises(ValueError):
-        ops.block_shotgun_solve(ps, jax.random.PRNGKey(0), K=2, rounds=8,
-                                fused=True)
-
-
 def test_sparse_warm_start_threads_through():
     """x0 warm start (λ-continuation) initializes z = A x0 on the sparse
     path exactly as on the dense one."""
@@ -223,3 +217,262 @@ def test_sparse_engine_single_shard_matches_block_solver():
                                float(r_blk.trace.objective[-1]), rtol=1e-4)
     np.testing.assert_allclose(np.asarray(r_sh.x), np.asarray(r_blk.x),
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-round sparse kernel (DESIGN §8.3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("category", ["sparse_imaging", "large_sparse"])
+def test_fused_sparse_kernel_matches_refs(category):
+    """The fused sparse kernel retraces both the nnz-tile oracle and the
+    dense fused oracle for the same (R, K) index matrix."""
+    Ad, S, y = _pair(seed=10, category=category)
+    rng = np.random.default_rng(11)
+    R, K = 4, 2
+    idx = jnp.asarray(rng.integers(0, S.nblk, (R, K)), jnp.int32)
+    x = jnp.asarray(rng.standard_normal(S.d_pad) * 0.1, jnp.float32)
+    z = S.matvec(x)
+    y = jnp.asarray(y, jnp.float32)
+    lam, beta = 0.5, 1.0
+
+    xk, zk, fk, nnzk = fused_sparse_shotgun_rounds(
+        S.rows, S.vals, z, x, idx, lam, beta, y, interpret=True)
+    xs, zs, fs, nnzs = ref.fused_sparse_shotgun_rounds_ref(
+        S.rows, S.vals, z, x, idx, lam, beta, y, "lasso")
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xs),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zs),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(fs), rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(nnzk), np.asarray(nnzs))
+
+    mask = jnp.ones(S.n, jnp.float32)
+    xd, zd, fd, _ = ref.fused_shotgun_rounds_ref(
+        jnp.asarray(Ad), z, x[: S.d], idx, lam, beta, y, mask, "lasso",
+        S.block)
+    np.testing.assert_allclose(np.asarray(xk[: S.d]), np.asarray(xd),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(fd), rtol=1e-3)
+
+
+def test_fused_sparse_delta_rounds_matches_ref():
+    """The engine variant reports (x, Δz) with Δz = z_new − z₀ and the same
+    iterate as the margin-owning kernel."""
+    _, S, y = _pair(seed=12)
+    rng = np.random.default_rng(13)
+    R, K = 3, 2
+    idx = jnp.asarray(rng.integers(0, S.nblk, (R, K)), jnp.int32)
+    x = jnp.asarray(rng.standard_normal(S.d_pad) * 0.1, jnp.float32)
+    z = S.matvec(x)
+    y = jnp.asarray(y, jnp.float32)
+
+    xk, dzk = fused_sparse_shotgun_delta_rounds(
+        S.rows, S.vals, z, x, idx, 0.5, 1.0, y, interpret=True)
+    xs, dzs = ref.fused_sparse_shotgun_delta_rounds_ref(
+        S.rows, S.vals, z, x, idx, 0.5, 1.0, y, "lasso")
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xs),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dzk), np.asarray(dzs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("category", ["sparse_imaging", "large_sparse"])
+def test_fused_sparse_solver_matches_two_kernel_sparse(category):
+    """block_shotgun_solve(fused=True) on BlockedCSC draws the same blocks
+    as the two-kernel sparse scan for the same key, so whole trajectories
+    coincide (the §8.3 acceptance equivalence)."""
+    _, S, y = _pair(category=category)
+    ps = obj.make_problem(S, y, lam=0.5)
+    r2 = ops.block_shotgun_solve(ps, jax.random.PRNGKey(1), K=2, rounds=80,
+                                 interpret=True)
+    rf = ops.block_shotgun_solve(ps, jax.random.PRNGKey(1), K=2, rounds=80,
+                                 interpret=True, fused=True,
+                                 rounds_per_launch=8)
+    np.testing.assert_allclose(np.asarray(rf.trace.objective),
+                               np.asarray(r2.trace.objective),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(rf.x), np.asarray(r2.x),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fused_sparse_solver_matches_dense_fused():
+    """Same key on the densified design: fused-sparse == dense-fused."""
+    Ad, S, y = _pair()
+    pd = obj.make_problem(Ad, y, lam=0.5)
+    ps = obj.make_problem(S, y, lam=0.5)
+    rd = ops.block_shotgun_solve(pd, jax.random.PRNGKey(5), K=2, rounds=16,
+                                 interpret=True, fused=True,
+                                 rounds_per_launch=8)
+    rs = ops.block_shotgun_solve(ps, jax.random.PRNGKey(5), K=2, rounds=16,
+                                 interpret=True, fused=True,
+                                 rounds_per_launch=8)
+    np.testing.assert_allclose(np.asarray(rs.trace.objective),
+                               np.asarray(rd.trace.objective),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(rs.x), np.asarray(rd.x),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fused_sparse_rejects_bad_rounds_per_launch():
+    _, S, y = _pair()
+    ps = obj.make_problem(S, y, lam=0.5)
+    with pytest.raises(ValueError, match="rounds=10"):
+        ops.block_shotgun_solve(ps, jax.random.PRNGKey(0), K=2, rounds=10,
+                                fused=True, rounds_per_launch=8)
+
+
+def test_fused_sparse_warm_start():
+    """x0 warm start initializes z0 = bcsc_matvec(A, x0) in the fused
+    launch scan exactly as the dense fused path initializes z0 = A x0."""
+    Ad, S, y = _pair()
+    pd = obj.make_problem(Ad, y, lam=0.5)
+    ps = obj.make_problem(S, y, lam=0.5)
+    x0 = np.asarray(shotgun_solve(pd, jax.random.PRNGKey(2), P=8,
+                                  rounds=200).x)
+    rd = ops.block_shotgun_solve(pd, jax.random.PRNGKey(3), K=2, rounds=16,
+                                 interpret=True, fused=True,
+                                 rounds_per_launch=8, x0=jnp.asarray(x0))
+    rs = ops.block_shotgun_solve(ps, jax.random.PRNGKey(3), K=2, rounds=16,
+                                 interpret=True, fused=True,
+                                 rounds_per_launch=8, x0=jnp.asarray(x0))
+    np.testing.assert_allclose(np.asarray(rs.trace.objective),
+                               np.asarray(rd.trace.objective),
+                               rtol=1e-3, atol=1e-3)
+    # warm trace must continue below the cold start's first objective
+    cold = ops.block_shotgun_solve(ps, jax.random.PRNGKey(3), K=2, rounds=16,
+                                   interpret=True, fused=True,
+                                   rounds_per_launch=8)
+    assert float(rs.trace.objective[0]) < float(cold.trace.objective[0])
+
+
+def test_sparse_fused_engine_single_shard_matches_fused_solver():
+    """engine="sparse_fused", merge="round" on a 1-shard mesh retraces
+    block_shotgun_solve(fused=True) on the same BlockedCSC problem (DESIGN
+    §3 trace equivalence), and merge="launch" matches at merge points."""
+    from repro.core.sharded import make_feature_mesh, shotgun_sharded_solve
+    _, S, y = _pair()
+    ps = obj.make_problem(S, y, lam=0.5)
+    mesh = make_feature_mesh(jax.devices()[:1])
+    rounds = 16
+    rf = ops.block_shotgun_solve(ps, jax.random.PRNGKey(4), K=2,
+                                 rounds=rounds, interpret=True, fused=True,
+                                 rounds_per_launch=8)
+    r_sh = shotgun_sharded_solve(ps, jax.random.PRNGKey(4), rounds=rounds,
+                                 engine="sparse_fused", merge="round", K=2,
+                                 mesh=mesh, trace_every=rounds)
+    np.testing.assert_allclose(float(r_sh.trace.objective[-1]),
+                               float(rf.trace.objective[-1]), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(r_sh.x), np.asarray(rf.x),
+                               rtol=1e-3, atol=1e-3)
+    r_la = shotgun_sharded_solve(ps, jax.random.PRNGKey(4), rounds=rounds,
+                                 engine="sparse_fused", merge="launch",
+                                 rounds_per_launch=8, K=2, mesh=mesh)
+    np.testing.assert_allclose(
+        np.asarray(r_la.trace.objective),
+        np.asarray(rf.trace.objective)[7::8], rtol=1e-4)
+
+
+def test_fused_sparse_vmem_budget_tracks_scratch_list():
+    """Drift pin for ``fused_sparse_vmem_bytes`` (DESIGN §8.3): the formula
+    must mirror ``_fused_sparse_call``'s actual resident set — 5 (6 with
+    Δz) n-vectors, three (nblk, block) x buffers, the (K, block) δ scratch,
+    and the double-buffered rows+vals tile pair.  Editing the kernel's
+    scratch/output lists must come back here."""
+    from repro.kernels.shotgun_sparse import fused_sparse_vmem_bytes
+    n, nblk, tile, K, block = 2048, 128, 16, 4, 128
+    expect = (5 * n * 4 + 3 * nblk * block * 4 + K * block * 4
+              + 2 * tile * block * 8)
+    assert fused_sparse_vmem_bytes(n, nblk, tile, K) == expect
+    assert (fused_sparse_vmem_bytes(n, nblk, tile, K, emit_dz=True)
+            == expect + n * 4)
+
+
+SUB_FUSED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import objectives as obj
+from repro.core.sharded import shotgun_sharded_solve, make_feature_mesh
+from repro.core.shotgun import shotgun_solve
+from repro.data import synthetic as syn
+
+# Same interference-safe shape as the dense engine leg: P* ~ 855 at
+# (2048, 8192, density 0.002), P_eff = 8 shards * K=1 * 128 = 1024 with
+# merge="round" disjoint-coordinate sampling (Thm 3.2 / Lemma 3.3).
+S, y, _ = syn.sparse_imaging(seed=0, n=2048, d=8192, density=0.002,
+                             layout="bcsc")
+prob = obj.make_problem(S, y, lam=0.5)
+mesh8 = make_feature_mesh()
+assert mesh8.devices.size == 8
+f_ref = float(shotgun_solve(prob, jax.random.PRNGKey(1), P=256,
+                            rounds=600).trace.objective[-1])
+
+# sparse_fused engine, one psum per round: matches the single-shard solve's
+# converged objective and keeps z == A x
+r = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), rounds=256,
+                          mesh=mesh8, engine="sparse_fused", merge="round",
+                          K=1, trace_every=8)
+f = float(r.trace.objective[-1])
+assert abs(f - f_ref) / f_ref < 0.10, (f, f_ref)
+np.testing.assert_allclose(np.asarray(r.z), np.asarray(obj.matvec(prob.A, r.x)),
+                           rtol=2e-3, atol=2e-3)
+# the sparse_fused and sparse_block engines draw the same blocks per shard,
+# and merge="round" removes all staleness: identical trajectories
+rb = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), rounds=256,
+                           mesh=mesh8, engine="sparse_block", merge="round",
+                           K=1, trace_every=8)
+np.testing.assert_allclose(np.asarray(r.trace.objective),
+                           np.asarray(rb.trace.objective), rtol=1e-4)
+print("SPARSE_FUSED_ROUND_OK")
+
+# merge="launch" on 2 shards: stale windows of R*K*128*2 = 512 updates stay
+# inside the interference budget (Lemma 3.3) and still converge (same shape
+# as the dense fused launch leg in test_sharded_engines.py)
+S2, y2, _ = syn.sparse_imaging(seed=1, n=2048, d=2048, density=0.002,
+                               layout="bcsc")
+prob2 = obj.make_problem(S2, y2, lam=0.5)
+f_ref2 = float(shotgun_solve(prob2, jax.random.PRNGKey(1), P=64,
+                             rounds=800).trace.objective[-1])
+mesh2 = Mesh(np.array(jax.devices()[:2]), ("f",))
+r = shotgun_sharded_solve(prob2, jax.random.PRNGKey(0), rounds=256,
+                          mesh=mesh2, engine="sparse_fused", merge="launch",
+                          rounds_per_launch=2, K=1, trace_every=8)
+f = float(r.trace.objective[-1])
+assert abs(f - f_ref2) / f_ref2 < 0.10, (f, f_ref2)
+print("SPARSE_FUSED_LAUNCH_OK")
+
+# compression + hierarchical merge compose with the sparse_fused engine
+c = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), rounds=64,
+                          mesh=mesh8, engine="sparse_fused", merge="round",
+                          K=1, trace_every=8, compression="int8")
+b = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), rounds=64,
+                          mesh=mesh8, engine="sparse_fused", merge="round",
+                          K=1, trace_every=8)
+fc, fb = float(c.trace.objective[-1]), float(b.trace.objective[-1])
+assert abs(fc - fb) / fb < 0.01, (fc, fb)
+meshh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "f"))
+h0 = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), rounds=64,
+                           mesh=meshh, engine="sparse_fused", K=1,
+                           trace_every=8)
+h1 = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), rounds=64,
+                           mesh=meshh, engine="sparse_fused", K=1,
+                           trace_every=8, hierarchical=True)
+np.testing.assert_allclose(np.asarray(h0.trace.objective),
+                           np.asarray(h1.trace.objective), rtol=1e-5)
+print("SPARSE_FUSED_WIRE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_sparse_fused_engine():
+    import os
+    import subprocess
+    import sys
+    out = subprocess.run([sys.executable, "-c", SUB_FUSED],
+                         capture_output=True, text=True, timeout=900,
+                         env={**os.environ, "PYTHONPATH": "src"})
+    for tag in ["SPARSE_FUSED_ROUND_OK", "SPARSE_FUSED_LAUNCH_OK",
+                "SPARSE_FUSED_WIRE_OK"]:
+        assert tag in out.stdout, out.stdout + out.stderr
