@@ -51,8 +51,17 @@ def run() -> list[dict]:
         us_two = time_us(lambda: ops.block_shotgun_round(
             Ap, z, x, blk, prob.lam, prob.beta, yp, mask, interpret=True), reps=5)
         us_fused_launch = time_us(lambda: fused_shotgun_rounds(
-            Ap, z, x, idx, prob.lam, prob.beta, yp, mask, interpret=True), reps=5)
+            Ap, z, x, idx, prob.lam, prob.beta, yp, mask, interpret=True),
+            reps=10)
         us_fused = us_fused_launch / R
+        # sentinel-armed launch: dynamic k_eff/guard ride the scalar-prefetch
+        # vector, health is one (1,1) VMEM scalar — overhead must stay ≤ 5%
+        # of per-round wall (DESIGN §9 acceptance; tests/test_health.py)
+        k_eff = jnp.int32(K)
+        guard_f = jnp.float32(3.4e38)
+        us_fused_g = time_us(lambda: fused_shotgun_rounds(
+            Ap, z, x, idx, prob.lam, prob.beta, yp, mask, interpret=True,
+            k_eff=k_eff, guard_f=guard_f), reps=10) / R
         # scalar Shotgun round with the same effective P = K*128
         us_scalar = time_us(lambda: shotgun_solve(
             prob, jax.random.PRNGKey(0), P=K * ops.BLOCK, rounds=1), reps=5)
@@ -62,6 +71,9 @@ def run() -> list[dict]:
             "n": n, "d": d, "K": K, "P_eff": K * ops.BLOCK,
             "rounds_per_launch": R,
             "fused_round_us": round(us_fused, 1),
+            "fused_round_guarded_us": round(us_fused_g, 1),
+            "sentinel_overhead_pct": round(
+                100.0 * (us_fused_g - us_fused) / us_fused, 2),
             "block_round_us": round(us_two, 1),
             "scalar_round_us": round(us_scalar, 1),
             "launches_per_round_fused": 1.0 / R,

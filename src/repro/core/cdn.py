@@ -20,6 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import health
 from repro.core import objectives as obj
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
@@ -113,7 +114,8 @@ def shotgun_cdn_solve(prob: Problem, key: jax.Array, P: int, rounds: int,
     keys = jax.random.split(key, rounds)
     (x, z, _), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0, logits0),
                                          (keys, jnp.arange(rounds)))
-    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                  status=health.status_from_trace(fs))
 
 
 def shooting_cdn_solve(prob: Problem, key: jax.Array, rounds: int,

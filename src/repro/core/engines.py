@@ -12,7 +12,8 @@ Protocol (all engines are hashable NamedTuples so they can ride through
 ``jax.jit`` as static configuration; the driver owns iterate init,
 padding, and the Δz merge):
 
-  ``engine.run(A_blk, y, mask, lam, beta, z, x_l, keys) -> (x_l, dz)``
+  ``engine.run(A_blk, y, mask, lam, beta, z, x_l, keys, p_eff)
+      -> (x_l, dz, health)``
       run ``keys.shape[0]`` rounds.  ``z`` is the last *merged* global
       margin; the engine sees its own updates immediately (its live view is
       ``z + dz_partial``) and other shards' updates only at the next merge —
@@ -21,6 +22,19 @@ padding, and the Δz merge):
       rounds per merge (the paper's interference story, Lemma 3.3, as an
       explicit knob).  ``keys`` are already shard-decorrelated by the
       driver.
+
+      ``p_eff`` (dynamic int32 scalar) is the driver's adaptive-P backoff
+      knob (DESIGN §9), in the engine's own parallelism units (coordinates
+      for the scalar engine, 128-blocks for the rest): each round still
+      draws the engine's full candidate set but masks updates at or past
+      ``p_eff`` — a bit-exact no-op at full width.  ``health`` is a scalar
+      f32 flag (0.0 healthy / 1.0 tripped): the O(1)-per-merge divergence
+      sentinel — non-finite Δz (or, for the fused engines, the in-kernel
+      health output).
+
+  ``engine.p_full``
+      the engine's full parallelism in the same units, for initializing the
+      driver's ``p_eff`` carry.
 
   ``engine.fold_always``
       scalar engine: True — the per-round key is folded with the shard
@@ -41,6 +55,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import health
 from repro.core import objectives as obj
 
 ENGINE_NAMES = ("scalar", "block", "fused", "sparse_block", "sparse_fused")
@@ -60,8 +75,13 @@ class ScalarEngine(NamedTuple):
 
     fold_always = True
 
-    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+    @property
+    def p_full(self):
+        return self.P_local
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys, p_eff):
         d_local = x_l.shape[0]
+        live = health.live_mask(self.P_local, p_eff)
 
         def round_fn(carry, key_t):
             x_l, dz = carry
@@ -69,13 +89,13 @@ class ScalarEngine(NamedTuple):
             r = obj.residual_like(z + dz, y, self.loss) * mask
             Ap = A_blk[:, idx]
             g = Ap.T @ r
-            delta = obj.shooting_delta(x_l[idx], g, lam, beta)
+            delta = obj.shooting_delta(x_l[idx], g, lam, beta) * live
             x_l = x_l.at[idx].add(delta)
             dz = dz + Ap @ delta
             return (x_l, dz), None
 
         (x_l, dz), _ = jax.lax.scan(round_fn, (x_l, jnp.zeros_like(z)), keys)
-        return x_l, dz
+        return x_l, dz, health.nonfinite_flag(dz)
 
 
 class BlockEngine(NamedTuple):
@@ -90,10 +110,15 @@ class BlockEngine(NamedTuple):
 
     fold_always = False
 
-    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+    @property
+    def p_full(self):
+        return self.K
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys, p_eff):
         from repro.kernels.shotgun_block import (gather_block_matvec,
                                                  scatter_block_update)
         nblk = x_l.shape[0] // self.block
+        live = health.live_mask(self.K, p_eff)[:, None]
 
         def round_fn(carry, key_t):
             x_l, dz = carry
@@ -105,7 +130,7 @@ class BlockEngine(NamedTuple):
             xb = x_l.reshape(nblk, self.block)
             x_sel = jnp.take(xb, blk, axis=0)
             x_new = obj.soft_threshold(x_sel - g / beta, lam / beta)
-            delta = x_new - x_sel
+            delta = (x_new - x_sel) * live
             dz = scatter_block_update(A_blk, dz, blk, delta,
                                       block=self.block,
                                       interpret=self.interpret)
@@ -113,7 +138,7 @@ class BlockEngine(NamedTuple):
             return (x_l, dz), None
 
         (x_l, dz), _ = jax.lax.scan(round_fn, (x_l, jnp.zeros_like(z)), keys)
-        return x_l, dz
+        return x_l, dz, health.nonfinite_flag(dz)
 
 
 class FusedEngine(NamedTuple):
@@ -129,7 +154,11 @@ class FusedEngine(NamedTuple):
 
     fold_always = False
 
-    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+    @property
+    def p_full(self):
+        return self.K
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys, p_eff):
         from repro.kernels.shotgun_block import fused_shotgun_delta_rounds
         nblk = x_l.shape[0] // self.block
         draw = lambda kt: jax.random.choice(kt, nblk, (self.K,),
@@ -137,7 +166,8 @@ class FusedEngine(NamedTuple):
         idx = jax.vmap(draw)(keys).astype(jnp.int32)
         return fused_shotgun_delta_rounds(
             A_blk, z, x_l, idx, lam, beta, y, mask, loss=self.loss,
-            block=self.block, tile_n=self.tile_n, interpret=self.interpret)
+            block=self.block, tile_n=self.tile_n, interpret=self.interpret,
+            k_eff=p_eff)
 
 
 class SparseBlockEngine(NamedTuple):
@@ -155,11 +185,16 @@ class SparseBlockEngine(NamedTuple):
 
     fold_always = False
 
-    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+    @property
+    def p_full(self):
+        return self.K
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys, p_eff):
         from repro.kernels.shotgun_sparse import (sparse_gather_block_matvec,
                                                   sparse_scatter_block_update)
         rows, vals = A_blk.rows, A_blk.vals
         nblk = rows.shape[0]
+        live = health.live_mask(self.K, p_eff)[:, None]
 
         def round_fn(carry, key_t):
             x_l, dz = carry
@@ -171,14 +206,14 @@ class SparseBlockEngine(NamedTuple):
             xb = x_l.reshape(nblk, self.block)
             x_sel = jnp.take(xb, blk, axis=0)
             x_new = obj.soft_threshold(x_sel - g / beta, lam / beta)
-            delta = x_new - x_sel
+            delta = (x_new - x_sel) * live
             dz = sparse_scatter_block_update(rows, vals, dz, blk, delta,
                                              interpret=self.interpret)
             x_l = xb.at[blk].add(delta).reshape(-1)
             return (x_l, dz), None
 
         (x_l, dz), _ = jax.lax.scan(round_fn, (x_l, jnp.zeros_like(z)), keys)
-        return x_l, dz
+        return x_l, dz, health.nonfinite_flag(dz)
 
 
 class SparseFusedEngine(NamedTuple):
@@ -197,7 +232,11 @@ class SparseFusedEngine(NamedTuple):
 
     fold_always = False
 
-    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys):
+    @property
+    def p_full(self):
+        return self.K
+
+    def run(self, A_blk, y, mask, lam, beta, z, x_l, keys, p_eff):
         from repro.kernels.shotgun_sparse import (
             fused_sparse_shotgun_delta_rounds)
         rows, vals = A_blk.rows, A_blk.vals
@@ -207,7 +246,7 @@ class SparseFusedEngine(NamedTuple):
         idx = jax.vmap(draw)(keys).astype(jnp.int32)
         return fused_sparse_shotgun_delta_rounds(
             rows, vals, z, x_l, idx, lam, beta, y, loss=self.loss,
-            interpret=self.interpret)
+            interpret=self.interpret, k_eff=p_eff)
 
 
 def make_engine(name: str, *, loss: str, P_local: int = 8, K: int = 2,

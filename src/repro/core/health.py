@@ -1,0 +1,147 @@
+"""Solver health: divergence sentinel, last-good rollback, adaptive-P backoff.
+
+Theorem 3.2 is two-sided: Shotgun converges (with linear speedup) while
+P < P* ~ d/rho(A^T A) and the interference term makes the objective
+*diverge* beyond it.  The solvers used to trust the caller's P and silently
+return NaN-laden iterates when it was wrong.  This module is the shared
+recovery layer (DESIGN §9):
+
+  * ``GuardConfig``  — static (hashable) sentinel configuration that rides
+    through ``jax.jit`` next to ``P``/``rounds``: the guard ``factor`` (trip
+    when F exceeds ``factor·|F_good| + factor`` or goes non-finite) and the
+    backoff floor ``p_min`` (clamp toward ``spectral.p_star``).
+  * ``GuardState``   — the in-carry snapshot: last-good (x, z, F), the live
+    parallelism ``p_eff``, and the backoff count.  Kept inside the
+    ``lax.scan`` carry so detection + rollback are O(1) device work per
+    round with no host sync.
+  * ``apply_sentinel`` — one sentinel step: trip test, rollback, halve
+    ``p_eff`` (clamped to the floor), snapshot refresh on improvement.
+
+Backoff never changes trace shapes: solvers keep drawing their full P (or
+K) candidates and *mask* updates past ``p_eff``, so a guarded solve stays a
+single compiled program across backoffs — and with ``p_eff`` at full width
+the mask multiplies by exactly 1.0, preserving unguarded trajectories
+bit-for-bit.
+
+``status_from_trace`` turns a finished trace (+ backoff count) into the
+``Result.status`` field: OK / DIVERGED / RECOVERED.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+STATUS_OK = 0          # converging, no sentinel trips
+STATUS_RECOVERED = 1   # sentinel tripped >= once, final trace healthy
+STATUS_DIVERGED = 2    # final trace non-finite or blown past the start
+
+STATUS_NAMES = {STATUS_OK: "ok", STATUS_RECOVERED: "recovered",
+                STATUS_DIVERGED: "diverged"}
+
+
+class GuardConfig(NamedTuple):
+    """Sentinel configuration (static: hashable, rides through jit).
+
+    factor   trip when F > factor·|F_good| + factor (the additive term
+             guards F_good ≈ 0) or F goes NaN/Inf.
+    p_min    backoff floor for the effective parallelism, in the solver's
+             own units (coordinates for the scalar solvers, 128-blocks for
+             the Pallas/block solvers).  Set it to ``spectral.p_star`` (or
+             ``ceil(p_star/128)`` blocks) to clamp the backoff at the
+             paper's predicted safe parallelism.
+    """
+    factor: float = 10.0
+    p_min: int = 1
+
+
+class GuardState(NamedTuple):
+    """Scan-carry state of the sentinel: last-good snapshot + live P."""
+    x_good: jax.Array
+    z_good: jax.Array
+    f_good: jax.Array      # scalar f32
+    p_eff: jax.Array       # scalar int32, current effective parallelism
+    backoffs: jax.Array    # scalar int32, number of sentinel trips
+
+
+def init_guard_state(x0, z0, f0, p_full: int) -> GuardState:
+    return GuardState(x_good=x0, z_good=z0,
+                      f_good=jnp.asarray(f0, jnp.float32),
+                      p_eff=jnp.asarray(p_full, jnp.int32),
+                      backoffs=jnp.zeros((), jnp.int32))
+
+
+def guard_threshold(f_good, factor: float):
+    """Objective level that trips the sentinel (additive term guards the
+    f_good ≈ 0 endgame, where a pure relative test would hair-trigger)."""
+    return factor * jnp.abs(f_good) + factor
+
+
+def live_mask(width: int, p_eff, dtype=jnp.float32):
+    """(width,) mask activating the first ``p_eff`` of ``width`` candidate
+    updates — exactly 1.0 everywhere when p_eff == width, so applying it at
+    full parallelism is a bit-exact no-op."""
+    return (jnp.arange(width) < p_eff).astype(dtype)
+
+
+def apply_sentinel(gs: GuardState, x_new, z_new, f_new, *, factor: float,
+                   p_floor: int, health=None):
+    """One sentinel step after a round (or launch) produced (x, z, F).
+
+    Trips when F is non-finite, F exceeds ``guard_threshold(f_good)``, or
+    an in-kernel ``health`` flag is raised; on a trip the iterate rolls
+    back to the last-good snapshot, ``p_eff`` halves (clamped to
+    ``p_floor``), and the reported objective is ``f_good`` (the trace stays
+    finite through a recovered divergence).  On a non-tripped round the
+    snapshot refreshes whenever F improves on it.
+
+    Returns ``(x, z, f_report, new_state, tripped)``.
+    """
+    f_new = jnp.asarray(f_new, jnp.float32)
+    bad = ~jnp.isfinite(f_new) | (f_new > guard_threshold(gs.f_good, factor))
+    if health is not None:
+        bad = bad | (jnp.asarray(health, jnp.float32) > 0)
+    x = jnp.where(bad, gs.x_good, x_new)
+    z = jnp.where(bad, gs.z_good, z_new)
+    f_report = jnp.where(bad, gs.f_good, f_new)
+    p_eff = jnp.where(bad,
+                      jnp.maximum(gs.p_eff // 2, jnp.int32(p_floor)),
+                      gs.p_eff)
+    improve = ~bad & (f_new <= gs.f_good)
+    new_state = GuardState(
+        x_good=jnp.where(improve, x_new, gs.x_good),
+        z_good=jnp.where(improve, z_new, gs.z_good),
+        f_good=jnp.where(improve, f_new, gs.f_good),
+        p_eff=p_eff,
+        backoffs=gs.backoffs + bad.astype(jnp.int32))
+    return x, z, f_report, new_state, bad
+
+
+def nonfinite_flag(*arrays):
+    """1.0 if any element of any array is NaN/Inf, else 0.0 — the engines'
+    O(1)-per-merge health scalar."""
+    bad = jnp.zeros((), jnp.bool_)
+    for a in arrays:
+        bad = bad | ~jnp.all(jnp.isfinite(a))
+    return bad.astype(jnp.float32)
+
+
+def status_from_trace(trace_objective, backoffs=None):
+    """Map a finished objective trace (+ optional backoff count) to a
+    ``Result.status`` code.  Scans the FULL trace: a NaN anywhere marks the
+    run diverged even if later entries look finite (NaN z with masked-out
+    samples can produce a finite-looking objective again)."""
+    t = jnp.asarray(trace_objective)
+    div = (jnp.any(~jnp.isfinite(t))
+           | (t[-1] > 1e3 * jnp.abs(t[0]) + 1e3))
+    status = jnp.where(div, STATUS_DIVERGED, STATUS_OK).astype(jnp.int32)
+    if backoffs is not None:
+        recovered = ~div & (jnp.asarray(backoffs) > 0)
+        status = jnp.where(recovered, STATUS_RECOVERED, status)
+    return status
+
+
+class SolverFailure(RuntimeError):
+    """Simulated mid-solve process death (checkpoint/resume tests mirror
+    ``launch.train.SimulatedFailure`` for the solver stack)."""

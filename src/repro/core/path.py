@@ -96,7 +96,7 @@ def _solver_by_name(name: str, **solver_kwargs) -> Callable:
 
 def solve_path(prob: obj.Problem, key: jax.Array, lam_target: float,
                P: int = 8, rounds_per_lambda: int = 200, num_lambdas: int = 10,
-               solver: str | Callable | None = None,
+               solver: str | Callable | None = None, validate_p: bool = True,
                **solver_kwargs) -> PathResult:
     """Warm-started lambda-continuation wrapper around any shotgun-family
     solver.
@@ -104,7 +104,23 @@ def solve_path(prob: obj.Problem, key: jax.Array, lam_target: float,
     ``solver`` is a ``SOLVER_NAMES`` entry (adapted automatically, warm
     starts included) or a callable
     ``solver(prob, key, P, rounds, x0) -> shotgun.Result``.
+
+    ``validate_p`` checks the requested ``P`` against the paper's safe
+    parallelism ``spectral.p_star(A)`` (Thm 3.2) before the continuation
+    loop and clamps with a warning — a diverging per-λ solve would poison
+    every later warm start, so the path driver refuses to start beyond P*
+    rather than relying on downstream recovery (DESIGN §9).
     """
+    if validate_p:
+        from repro.core import spectral
+        ps = spectral.p_star(prob.A)
+        if P > ps:
+            import warnings
+            warnings.warn(
+                f"solve_path: P={P} exceeds the Thm 3.2 safe parallelism "
+                f"P*={ps} for this design; clamping to P*={ps} "
+                f"(pass validate_p=False to override)", stacklevel=2)
+            P = ps
     if isinstance(solver, str):
         solver = _solver_by_name(solver, **solver_kwargs)
     elif solver_kwargs:

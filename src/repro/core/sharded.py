@@ -48,14 +48,18 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
+from repro.core import health
 from repro.core import objectives as obj
 from repro.core.engines import ENGINE_NAMES, ScalarEngine, make_engine
+from repro.core.health import GuardConfig
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
 from repro.data.sparse import BlockedCSC, pad_feature_blocks
 
 MERGE_MODES = ("round", "launch")
 COMPRESSION_SCHEMES = ("none", "int8", "topk")
+
+_FAULT_SALT = 0x5EED  # fault keys branch off the solve key here (DESIGN §9.3)
 
 
 def pad_features(A: jax.Array, num_shards: int) -> jax.Array:
@@ -89,12 +93,24 @@ def _compress_dz(dz, ef, scheme: str, topk_frac: float):
 
 @functools.partial(jax.jit, static_argnames=(
     "engine", "rounds", "merge_rounds", "mesh", "trace_every",
-    "compression", "topk_frac", "hierarchical"))
+    "compression", "topk_frac", "hierarchical", "guard", "faults"))
 def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
                   merge_rounds: int, mesh: Mesh, trace_every: int,
                   compression: str = "none", topk_frac: float = 0.01,
-                  hierarchical: bool = False) -> Result:
-    """shard_map driver over a RoundEngine on the (pre-padded) problem."""
+                  hierarchical: bool = False,
+                  guard: GuardConfig | None = None,
+                  faults=None) -> Result:
+    """shard_map driver over a RoundEngine on the (pre-padded) problem.
+
+    ``guard`` arms the §9 sentinel at trace-point granularity: each
+    bookkeeping step checks F (and the psum of the engines' health flags)
+    against the last-good snapshot, rolling back (x_l, z) and halving the
+    engines' ``p_eff`` on a trip — backoff is a dynamic scalar in the
+    carry, so it never recompiles.  ``faults`` (a ``dist.faults.FaultPlan``)
+    routes every Δz merge through ``faulty_psum``'s checksummed bounded
+    re-merge; fault keys are salted off the solve key so coordinate draws
+    are bit-identical with and without injection.
+    """
     n, d = A.shape
     axes = tuple(mesh.axis_names)
     nshards = mesh.devices.size
@@ -106,6 +122,10 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
         raise ValueError(
             f"number of merges {n_merges} (= rounds {rounds} / merge_rounds "
             f"{merge_rounds}) not divisible by trace_every={trace_every}")
+    if faults is not None and hierarchical:
+        raise ValueError(
+            "faults= injects at the flat psum merge; combine with "
+            "hierarchical=False (the hierarchical path has no re-merge hook)")
     if hierarchical:
         if len(axes) < 2:
             raise ValueError(
@@ -125,41 +145,84 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
             me = me * mesh.shape[ax] + jax.lax.axis_index(ax)
         z = jax.lax.psum(obj.matvec(A_blk, x0_blk), axes)  # global margin of x0
         ef = jnp.zeros(n, jnp.float32)             # §7 error feedback
+        # fault keys ride a salted side-stream: solve draws stay bit-equal
+        fkey = jax.random.fold_in(key_rep, _FAULT_SALT)
+
+        def objective(z, x_l):
+            f_data = obj.masked_data_loss(z, y_rep, m_rep, engine.loss)
+            return f_data + lam * jax.lax.psum(jnp.sum(jnp.abs(x_l)), axes)
 
         def merge_fn(carry, keys_m):
-            x_l, z, ef = carry
+            x_l, z, ef, p_eff, m, h = carry
             if engine.fold_always or nshards > 1:  # decorrelate shards
                 keys_m = jax.vmap(
                     lambda kt: jax.random.fold_in(kt, me))(keys_m)
-            x_l, dz = engine.run(A_blk, y_rep, m_rep, lam, beta, z, x_l,
-                                 keys_m)
+            x_l, dz, h_e = engine.run(A_blk, y_rep, m_rep, lam, beta, z, x_l,
+                                      keys_m, p_eff)
             if compression != "none":
                 dz, ef = _compress_dz(dz, ef, compression, topk_frac)
-            if hierarchical:
+            if faults is not None:
+                from repro.dist.faults import faulty_psum
+                dz_g, h_f = faulty_psum(dz, jax.random.fold_in(fkey, m), me,
+                                        faults, axes)
+                h = jnp.maximum(h, h_f)
+            elif hierarchical:
                 from repro.dist.collectives import hierarchical_psum
                 dz_g = hierarchical_psum(dz, axes[0], axes[1:])
             else:
                 dz_g = jax.lax.psum(dz, axes)
-            return (x_l, z + dz_g, ef), None
+            h = jnp.maximum(h, h_e)
+            return (x_l, z + dz_g, ef, p_eff, m + 1, h), None
 
         def outer_fn(carry, keys_o):
             # trace_every merges without objective bookkeeping, then one
             # F(x)/nnz evaluation (2 scalar psums) — the bookkeeping psums
             # cost as much wire as the dz psum itself when traced per merge
-            carry, _ = jax.lax.scan(merge_fn, carry, keys_o)
-            x_l, z, _ = carry
-            f_data = obj.masked_data_loss(z, y_rep, m_rep, engine.loss)
-            f_reg = lam * jax.lax.psum(jnp.sum(jnp.abs(x_l)), axes)
+            if guard is None:
+                carry, _ = jax.lax.scan(merge_fn, carry, keys_o)
+                (x_l, z, ef, p_eff, m, h), gs = carry, None
+                f_out = objective(z, x_l)
+            else:
+                (inner_c, gs) = carry
+                inner_c, _ = jax.lax.scan(merge_fn, inner_c, keys_o)
+                x_l, z, ef, _, m, h = inner_c
+                # health flags are shard-local (non-finite local Δz, failed
+                # re-merges) — combine before the replicated trip decision
+                h_g = jax.lax.psum(h, axes)
+                x_l, z, f_out, gs, bad = health.apply_sentinel(
+                    gs, x_l, z, objective(z, x_l), factor=guard.factor,
+                    p_floor=p_floor, health=h_g)
+                # discarded updates invalidate their §7 error feedback too
+                ef = jnp.where(bad, jnp.zeros_like(ef), ef)
             nnz = jax.lax.psum(jnp.sum(x_l != 0), axes)
-            return carry, (f_data + f_reg, nnz)
+            h0 = jnp.zeros((), jnp.float32)      # sentinel consumed the flag
+            if guard is None:
+                carry = (x_l, z, ef, p_eff, m, h0)
+            else:
+                carry = ((x_l, z, ef, gs.p_eff, m, h0), gs)
+            return carry, (f_out, nnz)
 
         keys = jax.random.split(key_rep, rounds)
         keys = keys.reshape(n_merges // trace_every, trace_every,
                             merge_rounds, -1)
         x0_l = x0_blk.astype(jnp.float32)
-        (x_l, z, _), (fs, nnzs) = jax.lax.scan(outer_fn, (x0_l, z, ef), keys)
-        return x_l, z, fs, nnzs
+        m0 = jnp.zeros((), jnp.int32)
+        h0 = jnp.zeros((), jnp.float32)
+        if guard is None:
+            carry0 = (x0_l, z, ef, jnp.int32(engine.p_full), m0, h0)
+            (x_l, z, _, _, _, _), (fs, nnzs) = jax.lax.scan(
+                outer_fn, carry0, keys)
+            backoffs = jnp.zeros((), jnp.int32)
+        else:
+            gs0 = health.init_guard_state(x0_l, z, objective(z, x0_l),
+                                          engine.p_full)
+            carry0 = ((x0_l, z, ef, gs0.p_eff, m0, h0), gs0)
+            ((x_l, z, _, _, _, _), gs), (fs, nnzs) = jax.lax.scan(
+                outer_fn, carry0, keys)
+            backoffs = gs.backoffs
+        return x_l, z, fs, nnzs, backoffs
 
+    p_floor = 1 if guard is None else max(1, min(guard.p_min, engine.p_full))
     if isinstance(A, BlockedCSC):
         # column-block sharding: split the (nblk, tile, block) tiles on the
         # leading axis; metadata rides along untouched (engines read shapes
@@ -170,11 +233,12 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
     solve = shard_map(
         solve_local, mesh=mesh,
         in_specs=(a_spec, P(None), P(None), P(axes), P(None)),
-        out_specs=(P(axes), P(None), P(None), P(None)),
+        out_specs=(P(axes), P(None), P(None), P(None), P(None)),
         check_vma=False,
     )
-    x, z, fs, nnzs = solve(A, y, mask, x0, key)
-    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+    x, z, fs, nnzs, backoffs = solve(A, y, mask, x0, key)
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                  status=health.status_from_trace(fs, backoffs))
 
 
 # Legacy entry point, kept positional-compatible for benchmarks
@@ -198,7 +262,12 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
                           x0: jax.Array | None = None,
                           compression: str = "none", topk_frac: float = 0.01,
                           hierarchical: bool = False,
-                          interpret: bool = True) -> Result:
+                          interpret: bool = True,
+                          guard: GuardConfig | None = None,
+                          faults=None,
+                          ckpt_dir=None, ckpt_every: int = 0,
+                          fail_at_merge: int | None = None,
+                          resume: bool = False) -> Result:
     """Distributed Shotgun over any round engine (DESIGN §3).
 
     engine      "scalar" (P = P_local × shards coordinate updates/round),
@@ -216,6 +285,21 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
                 wire layer with error feedback.
     hierarchical  on a 2-D (outer, inner) mesh, merge Δz via
                 reduce-scatter(inner) → psum(outer) → all-gather(inner).
+    guard       §9 sentinel + adaptive-P backoff (``health.GuardConfig``);
+                ``guard.p_min`` is in the engine's parallelism units.
+    faults      §9.3 Δz fault injection (``dist.faults.FaultPlan``): every
+                merge runs through the checksummed re-merging psum.
+    ckpt_every  > 0 segments the solve at merge granularity (must be a
+                multiple of ``trace_every`` dividing the merge count): keys
+                are folded per segment, z is rebuilt from x at each segment
+                start, so a segmented solve is a deterministic function of
+                (key, ckpt_every) regardless of interruption.  With
+                ``ckpt_dir`` each segment is checkpointed (``ckpt/``,
+                atomic, reshardable); ``resume=True`` continues from the
+                newest checkpoint.  ``fail_at_merge`` simulates process
+                death once that many merges have completed (raises
+                ``health.SolverFailure`` — the ckpt/resume tests' kill
+                switch).
 
     The trace has one (objective, nnz) point per ``trace_every`` merges.
     """
@@ -273,8 +357,79 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
     d_full = A.d_pad if isinstance(A, BlockedCSC) else A.shape[1]
     x0 = (jnp.zeros(d_full, jnp.float32) if x0 is None
           else jnp.pad(jnp.asarray(x0, jnp.float32), (0, d_full - prob.d)))
-    res = _engine_solve(A, y, mask, x0, prob.lam, prob.beta, key, engine=eng,
-                        rounds=rounds, merge_rounds=merge_rounds, mesh=mesh,
-                        trace_every=trace_every, compression=compression,
-                        topk_frac=topk_frac, hierarchical=hierarchical)
-    return Result(x=res.x[: prob.d], z=res.z[: prob.n], trace=res.trace)
+    kw = dict(engine=eng, merge_rounds=merge_rounds, mesh=mesh,
+              trace_every=trace_every, compression=compression,
+              topk_frac=topk_frac, hierarchical=hierarchical,
+              guard=guard, faults=faults)
+
+    if ckpt_every <= 0:
+        if fail_at_merge is not None or resume or ckpt_dir is not None:
+            raise ValueError(
+                "ckpt_dir/fail_at_merge/resume need ckpt_every > 0 "
+                "(segmented solve)")
+        res = _engine_solve(A, y, mask, x0, prob.lam, prob.beta, key,
+                            rounds=rounds, **kw)
+        return Result(x=res.x[: prob.d], z=res.z[: prob.n], trace=res.trace,
+                      status=res.status)
+
+    # --- segmented solve with periodic checkpointing (DESIGN §9.4) -------
+    # Host-level segments: fold_in(key, seg) per segment and rebuild z from
+    # x at each segment start, so the trajectory is a pure function of
+    # (key, ckpt_every) — an interrupted+resumed run matches an
+    # uninterrupted run with the same ckpt_every exactly, point for point.
+    n_merges = rounds // merge_rounds
+    if ckpt_every % trace_every or n_merges % ckpt_every:
+        raise ValueError(
+            f"ckpt_every={ckpt_every} must be a multiple of trace_every="
+            f"{trace_every} and divide the merge count {n_merges}")
+    n_seg = n_merges // ckpt_every
+    seg_rounds = ckpt_every * merge_rounds
+    pts_per_seg = ckpt_every // trace_every
+    n_pts = n_merges // trace_every
+
+    import numpy as np
+    fs_full = np.zeros(n_pts, np.float32)
+    nnz_full = np.zeros(n_pts, np.int32)
+    seg0, status = 0, 0
+    x_cur, z_cur = x0, None
+    if resume:
+        from repro.ckpt import checkpoint as ckpt
+        template = {"x": jax.ShapeDtypeStruct((d_full,), jnp.float32),
+                    "fs": jax.ShapeDtypeStruct((n_pts,), jnp.float32),
+                    "nnz": jax.ShapeDtypeStruct((n_pts,), jnp.int32),
+                    "seg": jax.ShapeDtypeStruct((), jnp.int32),
+                    "status": jax.ShapeDtypeStruct((), jnp.int32)}
+        step, state = ckpt.restore(ckpt_dir, template)
+        seg0 = int(state["seg"])
+        status = int(state["status"])
+        fs_full[:] = np.asarray(state["fs"])
+        nnz_full[:] = np.asarray(state["nnz"])
+        x_cur = jnp.asarray(state["x"])
+
+    for seg in range(seg0, n_seg):
+        if fail_at_merge is not None and seg * ckpt_every >= fail_at_merge:
+            raise health.SolverFailure(
+                f"simulated death at merge {seg * ckpt_every} "
+                f"({seg}/{n_seg} segments checkpointed)")
+        res = _engine_solve(A, y, mask, x_cur, prob.lam, prob.beta,
+                            jax.random.fold_in(key, seg),
+                            rounds=seg_rounds, **kw)
+        x_cur, z_cur = res.x, res.z
+        fs_full[seg * pts_per_seg:(seg + 1) * pts_per_seg] = np.asarray(
+            res.trace.objective)
+        nnz_full[seg * pts_per_seg:(seg + 1) * pts_per_seg] = np.asarray(
+            res.trace.nnz)
+        status = max(status, int(res.status))    # DIVERGED > RECOVERED > OK
+        if ckpt_dir is not None:
+            from repro.ckpt import checkpoint as ckpt
+            ckpt.save(ckpt_dir, seg + 1,
+                      {"x": x_cur, "fs": jnp.asarray(fs_full),
+                       "nnz": jnp.asarray(nnz_full),
+                       "seg": jnp.int32(seg + 1), "status": jnp.int32(status)})
+
+    if z_cur is None:               # resumed after the final segment
+        z_cur = obj.matvec(A, x_cur)
+    return Result(x=x_cur[: prob.d], z=z_cur[: prob.n],
+                  trace=Trace(objective=jnp.asarray(fs_full),
+                              nnz=jnp.asarray(nnz_full)),
+                  status=jnp.int32(status))

@@ -25,7 +25,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import health
 from repro.core import objectives as obj
+from repro.core.health import GuardConfig
 from repro.core.objectives import Problem, DupProblem
 
 
@@ -38,6 +40,9 @@ class Result(NamedTuple):
     x: jax.Array
     z: jax.Array           # final margin A x
     trace: Trace
+    # health.STATUS_OK / STATUS_RECOVERED / STATUS_DIVERGED (int32 scalar);
+    # None only for legacy constructors that predate the sentinel layer.
+    status: jax.Array | None = None
 
 
 def _sample(key, d, P, replace: bool):
@@ -46,39 +51,71 @@ def _sample(key, d, P, replace: bool):
     return jax.random.choice(key, d, (P,), replace=False)
 
 
-@functools.partial(jax.jit, static_argnames=("P", "rounds", "replace"))
+@functools.partial(jax.jit, static_argnames=("P", "rounds", "replace",
+                                             "guard"))
 def shotgun_solve(prob: Problem, key: jax.Array, P: int, rounds: int,
-                  x0: jax.Array | None = None, replace: bool = True) -> Result:
+                  x0: jax.Array | None = None, replace: bool = True,
+                  guard: GuardConfig | None = None) -> Result:
     """Run `rounds` synchronous Shotgun rounds of P parallel updates each.
 
     ``prob.A`` may be dense or a ``BlockedCSC`` container: the round is
     written against the ``gather_cols`` / ``cols_rmatvec`` /
     ``cols_matvec_add`` seam, so on a sparse design the per-round cost is
     O(tile·P) nnz-tile work instead of O(n·P) dense columns (DESIGN §8).
+
+    ``guard`` enables the divergence sentinel + adaptive-P backoff
+    (DESIGN §9): every round still draws P candidate coordinates but only
+    the first ``p_eff`` apply; when the objective trips the guard the round
+    rolls back to the last-good (x, z) snapshot held in the scan carry and
+    ``p_eff`` halves (clamped to ``guard.p_min``, e.g. ``spectral.p_star``).
+    ``guard=None`` (default) is the original unguarded path, trajectory
+    unchanged.
     """
     A, y, lam, beta = prob.A, prob.y, prob.lam, prob.beta
     d = A.shape[1]
     x0 = jnp.zeros(d, A.dtype) if x0 is None else x0
     z0 = obj.matvec(A, x0)
 
-    def round_fn(carry, key_t):
-        x, z = carry
-        idx = _sample(key_t, d, P, replace)
+    def update(x, z, idx, p_eff):
         r = obj.residual_like(z, y, prob.loss)
         cols = obj.gather_cols(A, idx)       # (n, P) dense or nnz tiles
         g = obj.cols_rmatvec(cols, r)        # (P,) coordinate gradients
         delta = obj.shooting_delta(x[idx], g, lam, beta)
+        if p_eff is not None:                # sentinel backoff: mask, don't
+            delta = delta * health.live_mask(P, p_eff)   # reshape (DESIGN §9)
         # Collective update Δx: scatter-add sums deltas of duplicate draws,
         # matching the multiset semantics of Alg. 2.
         x = x.at[idx].add(delta)
         z = obj.cols_matvec_add(cols, delta, z)
-        f = obj.objective_from_margin(z, x, prob)
-        nnz = jnp.sum(x != 0)
-        return (x, z), (f, nnz)
+        return x, z, obj.objective_from_margin(z, x, prob)
 
     keys = jax.random.split(key, rounds)
-    (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
-    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+
+    if guard is None:
+        def round_fn(carry, key_t):
+            x, z = carry
+            x, z, f = update(x, z, _sample(key_t, d, P, replace), None)
+            return (x, z), (f, jnp.sum(x != 0))
+
+        (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
+        return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                      status=health.status_from_trace(fs))
+
+    p_floor = max(1, min(guard.p_min, P))
+
+    def round_fn(carry, key_t):
+        x, z, gs = carry
+        idx = _sample(key_t, d, P, replace)
+        x_new, z_new, f_new = update(x, z, idx, gs.p_eff)
+        x, z, f, gs, _ = health.apply_sentinel(
+            gs, x_new, z_new, f_new, factor=guard.factor, p_floor=p_floor)
+        return (x, z, gs), (f, jnp.sum(x != 0))
+
+    f0 = obj.objective_from_margin(z0, x0, prob)
+    gs0 = health.init_guard_state(x0, z0, f0, P)
+    (x, z, gs), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0, gs0), keys)
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                  status=health.status_from_trace(fs, gs.backoffs))
 
 
 def shooting_solve(prob: Problem, key: jax.Array, rounds: int,
@@ -129,7 +166,8 @@ def shotgun_dup_solve(dp: DupProblem, key: jax.Array, P: int, rounds: int,
 
     keys = jax.random.split(key, rounds)
     (xhat, z), (fs, nnzs) = jax.lax.scan(round_fn, (xhat0, z0), keys)
-    return Result(x=xhat, z=z, trace=Trace(objective=fs, nnz=nnzs))
+    return Result(x=xhat, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                  status=health.status_from_trace(fs))
 
 
 # ---------------------------------------------------------------------------
@@ -188,16 +226,23 @@ def get_solver(name: str):
 def rounds_to_tolerance(trace_objective, f_star, rel_tol=0.005):
     """First round index with F within rel_tol of F* (paper's 0.5% criterion).
 
-    Returns len(trace) if never reached (incl. divergence).
+    Returns len(trace) if never reached (incl. divergence).  Non-finite
+    entries never count as hits: a -inf/NaN objective is divergence, not
+    convergence (NaN compares false anyway; -inf needs the explicit check).
     """
-    f0 = trace_objective[0]
     target = f_star + rel_tol * jnp.abs(f_star)
-    hit = trace_objective <= target
+    t = jnp.asarray(trace_objective)
+    hit = (t <= target) & jnp.isfinite(t)
     idx = jnp.argmax(hit)
     reached = jnp.any(hit)
-    return jnp.where(reached, idx, trace_objective.shape[0])
+    return jnp.where(reached, idx, t.shape[0])
 
 
 def diverged(trace_objective) -> jax.Array:
-    last = trace_objective[-1]
-    return jnp.isnan(last) | jnp.isinf(last) | (last > 1e3 * jnp.abs(trace_objective[0]) + 1e3)
+    """True when the trace shows divergence ANYWHERE: any non-finite entry,
+    or a final objective blown 1000x past the start.  Scanning the full
+    trace matters — a NaN margin can round-trip to a finite-looking
+    objective later (0·NaN masking), so trace[-1] alone under-reports."""
+    t = jnp.asarray(trace_objective)
+    return (jnp.any(jnp.isnan(t) | jnp.isinf(t))
+            | (t[-1] > 1e3 * jnp.abs(t[0]) + 1e3))

@@ -54,3 +54,12 @@ def p_star_dup(A: jax.Array, key: jax.Array | None = None, iters: int = 100) -> 
     """Duplicated-feature bound of Thm 3.2: P < 2d/rho + 1."""
     rho = spectral_radius(A, key, iters)
     return int(jnp.ceil(2 * A.shape[1] / jnp.maximum(rho, 1.0)))
+
+
+def p_star_blocks(A: jax.Array, block: int = 128,
+                  key: jax.Array | None = None, iters: int = 100) -> int:
+    """P* expressed in ``block``-sized coordinate blocks (>= 1): the backoff
+    floor for the Pallas block solvers, whose parallelism unit is K blocks
+    of 128 coordinates (``GuardConfig.p_min`` wants the solver's own
+    units, DESIGN §9)."""
+    return max(1, -(-p_star(A, key, iters) // block))

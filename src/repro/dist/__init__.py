@@ -9,3 +9,4 @@ from repro.dist.compression import (QuantInt8, TopK, quantize_int8,
                                     topk_decompress, ef_init, compress_grads,
                                     wire_bytes)
 from repro.dist.collectives import hierarchical_psum
+from repro.dist.faults import FaultPlan, faulty_psum, inject_dz

@@ -28,7 +28,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import health
 from repro.core import objectives as obj
+from repro.core.health import GuardConfig
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
 from repro.data.sparse import BlockedCSC, bcsc_matvec
@@ -59,8 +61,11 @@ def pad_problem(A, y, block=BLOCK, tile_n=TILE_N):
 @functools.partial(jax.jit, static_argnames=("block", "loss", "interpret"))
 def block_shotgun_round(A, z, x, blk_idx, lam, beta, y, mask,
                         loss: str = obj.LASSO, block: int = BLOCK,
-                        interpret: bool = False):
-    """One Block-Shotgun round.  Returns (x_new, z_new, delta)."""
+                        interpret: bool = False, k_eff=None):
+    """One Block-Shotgun round.  Returns (x_new, z_new, delta).
+
+    ``k_eff`` (dynamic) masks blocks at or past the backoff point
+    (DESIGN §9); None applies all K drawn blocks, bit-exactly."""
     r = obj.residual_like(z, y, loss) * mask
     g = gather_block_matvec(A, r, blk_idx, block=block, interpret=interpret)
     d = x.shape[0]
@@ -68,42 +73,77 @@ def block_shotgun_round(A, z, x, blk_idx, lam, beta, y, mask,
     x_sel = jnp.take(xb, blk_idx, axis=0)
     x_new_sel = obj.soft_threshold(x_sel - g / beta, lam / beta)
     delta = x_new_sel - x_sel
+    if k_eff is not None:
+        delta = delta * health.live_mask(blk_idx.shape[0], k_eff)[:, None]
     z_new = scatter_block_update(A, z, blk_idx, delta, block=block,
                                  interpret=interpret)
     xb = xb.at[blk_idx].add(delta)
     return xb.reshape(d), z_new, delta
 
 
-@functools.partial(jax.jit, static_argnames=("K", "rounds", "block", "loss", "interpret"))
+@functools.partial(jax.jit, static_argnames=("K", "rounds", "block", "loss",
+                                             "interpret", "guard"))
 def _solve(A, y, mask, lam, beta, key, K, rounds, block, loss, interpret,
-           x0=None):
+           x0=None, guard=None):
     n, d = A.shape
     nblk = d // block
     x0 = jnp.zeros(d, A.dtype) if x0 is None else x0.astype(A.dtype)
     z0 = A @ x0                       # = 0 for the cold start
 
-    def round_fn(carry, key_t):
-        x, z = carry
-        blk_idx = jax.random.choice(key_t, nblk, (K,), replace=False)
-        x, z, _ = block_shotgun_round(A, z, x, blk_idx, lam, beta, y, mask,
-                                      loss=loss, block=block,
-                                      interpret=interpret)
-        f = obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
-        return (x, z), (f, jnp.sum(x != 0))
+    def objective(z, x):
+        return obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
 
     keys = jax.random.split(key, rounds)
-    (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
-    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+
+    if guard is None:
+        def round_fn(carry, key_t):
+            x, z = carry
+            blk_idx = jax.random.choice(key_t, nblk, (K,), replace=False)
+            x, z, _ = block_shotgun_round(A, z, x, blk_idx, lam, beta, y,
+                                          mask, loss=loss, block=block,
+                                          interpret=interpret)
+            return (x, z), (objective(z, x), jnp.sum(x != 0))
+
+        (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
+        return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                      status=health.status_from_trace(fs))
+
+    p_floor = max(1, min(guard.p_min, K))
+
+    def round_fn(carry, key_t):
+        x, z, gs = carry
+        blk_idx = jax.random.choice(key_t, nblk, (K,), replace=False)
+        x_new, z_new, _ = block_shotgun_round(A, z, x, blk_idx, lam, beta,
+                                              y, mask, loss=loss,
+                                              block=block,
+                                              interpret=interpret,
+                                              k_eff=gs.p_eff)
+        x, z, f, gs, _ = health.apply_sentinel(
+            gs, x_new, z_new, objective(z_new, x_new),
+            factor=guard.factor, p_floor=p_floor)
+        return (x, z, gs), (f, jnp.sum(x != 0))
+
+    gs0 = health.init_guard_state(x0, z0, objective(z0, x0), K)
+    (x, z, gs), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0, gs0), keys)
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                  status=health.status_from_trace(fs, gs.backoffs))
 
 
 @functools.partial(jax.jit, static_argnames=("K", "rounds", "R", "block",
-                                             "tile_n", "loss", "interpret"))
+                                             "tile_n", "loss", "interpret",
+                                             "guard"))
 def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
-                 loss, interpret, x0=None):
+                 loss, interpret, x0=None, guard=None):
     """Scan over launches: one fused pallas_call per R rounds.
 
     Draws the same per-round keys/indices as ``_solve`` (jax.random.split of
     the same key, same choice() calls), so the two trajectories coincide.
+
+    With ``guard`` the in-kernel sentinel (health scalar + k_eff mask) makes
+    the *launch* the rollback granularity: a launch whose health scalar
+    trips is discarded wholesale — iterate and margin roll back to the
+    last-good snapshot in the scan carry, k_eff halves — so divergence
+    detection costs one scalar read per launch, not a trace scan.
     """
     n, d = A.shape
     nblk = d // block
@@ -113,29 +153,58 @@ def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
     z0 = (A @ x0).astype(jnp.float32)  # = 0 for the cold start
     draw = functools.partial(jax.random.choice, a=nblk, shape=(K,),
                              replace=False)
+    keys = jax.random.split(key, rounds).reshape(L, R, -1)
+
+    if guard is None:
+        def launch_fn(carry, keys_l):
+            x, z = carry
+            idx = jax.vmap(lambda kt: draw(kt))(keys_l).astype(jnp.int32)
+            x, z, fs, nnzs, _ = fused_shotgun_rounds(
+                A, z, x, idx, lam, beta, y, mask, loss=loss, block=block,
+                tile_n=tile_n, interpret=interpret)
+            return (x, z), (fs, nnzs)
+
+        (x, z), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0), keys)
+        fs = fs.reshape(rounds)
+        return Result(x=x, z=z,
+                      trace=Trace(objective=fs, nnz=nnzs.reshape(rounds)),
+                      status=health.status_from_trace(fs))
+
+    p_floor = max(1, min(guard.p_min, K))
 
     def launch_fn(carry, keys_l):
-        x, z = carry
+        x, z, gs = carry
         idx = jax.vmap(lambda kt: draw(kt))(keys_l).astype(jnp.int32)
-        x, z, fs, nnzs = fused_shotgun_rounds(
+        x_new, z_new, fs, nnzs, h = fused_shotgun_rounds(
             A, z, x, idx, lam, beta, y, mask, loss=loss, block=block,
-            tile_n=tile_n, interpret=interpret)
-        return (x, z), (fs, nnzs)
+            tile_n=tile_n, interpret=interpret, k_eff=gs.p_eff,
+            guard_f=health.guard_threshold(gs.f_good, guard.factor))
+        x, z, f_rep, gs, bad = health.apply_sentinel(
+            gs, x_new, z_new, fs[-1], factor=guard.factor, p_floor=p_floor,
+            health=h)
+        # A rolled-back launch reports the snapshot objective for all its
+        # rounds: the trace stays finite through a recovered divergence.
+        fs = jnp.where(bad, jnp.full_like(fs, f_rep), fs)
+        nnzs = jnp.where(bad, jnp.full_like(nnzs, jnp.sum(x != 0)), nnzs)
+        return (x, z, gs), (fs, nnzs)
 
-    keys = jax.random.split(key, rounds).reshape(L, R, -1)
-    (x, z), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0), keys)
+    f0 = obj.masked_data_loss(z0, y, mask, loss) + lam * jnp.sum(jnp.abs(x0))
+    gs0 = health.init_guard_state(x0, z0, f0, K)
+    (x, z, gs), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0, gs0), keys)
+    fs = fs.reshape(rounds)
     return Result(x=x, z=z,
-                  trace=Trace(objective=fs.reshape(rounds),
-                              nnz=nnzs.reshape(rounds)))
+                  trace=Trace(objective=fs, nnz=nnzs.reshape(rounds)),
+                  status=health.status_from_trace(fs, gs.backoffs))
 
 
 @functools.partial(jax.jit, static_argnames=("loss", "interpret"))
 def sparse_block_shotgun_round(rows, vals, z, x, blk_idx, lam, beta, y,
                                loss: str = obj.LASSO,
-                               interpret: bool = False):
+                               interpret: bool = False, k_eff=None):
     """One Block-Shotgun round on BlockedCSC nnz tiles (the sparse
     counterpart of ``block_shotgun_round``; no mask — the sparse path never
-    pads samples).  Returns (x_new, z_new, delta)."""
+    pads samples).  ``k_eff`` masks blocks past the backoff point
+    (DESIGN §9).  Returns (x_new, z_new, delta)."""
     nblk, tile, block = rows.shape
     r = obj.residual_like(z, y, loss)
     g = sparse_gather_block_matvec(rows, vals, r, blk_idx,
@@ -143,6 +212,8 @@ def sparse_block_shotgun_round(rows, vals, z, x, blk_idx, lam, beta, y,
     xb = x.reshape(nblk, block)
     x_sel = jnp.take(xb, blk_idx, axis=0)
     delta = block_delta(x_sel, g, lam, beta)
+    if k_eff is not None:
+        delta = delta * health.live_mask(blk_idx.shape[0], k_eff)[:, None]
     z_new = sparse_scatter_block_update(rows, vals, z, blk_idx, delta,
                                         interpret=interpret)
     xb = xb.at[blk_idx].add(delta)
@@ -150,9 +221,9 @@ def sparse_block_shotgun_round(rows, vals, z, x, blk_idx, lam, beta, y,
 
 
 @functools.partial(jax.jit, static_argnames=("K", "rounds", "loss",
-                                             "interpret"))
+                                             "interpret", "guard"))
 def _sparse_solve(rows, vals, y, lam, beta, key, K, rounds, loss, interpret,
-                  x0=None):
+                  x0=None, guard=None):
     """Round scan over the sparse Pallas kernels (BlockedCSC tiles).
 
     Draws the same block indices as the dense ``_solve`` for the same key,
@@ -166,65 +237,122 @@ def _sparse_solve(rows, vals, y, lam, beta, key, K, rounds, loss, interpret,
     x0 = jnp.zeros(d_pad, jnp.float32) if x0 is None else x0.astype(jnp.float32)
     z0 = bcsc_matvec(rows, vals, x0, n)
 
-    def round_fn(carry, key_t):
-        x, z = carry
-        blk_idx = jax.random.choice(key_t, nblk, (K,),
-                                    replace=False).astype(jnp.int32)
-        x, z, _ = sparse_block_shotgun_round(rows, vals, z, x, blk_idx, lam,
-                                             beta, y, loss=loss,
-                                             interpret=interpret)
-        f = obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
-        return (x, z), (f, jnp.sum(x != 0))
+    def objective(z, x):
+        return obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
 
     keys = jax.random.split(key, rounds)
-    (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
-    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs))
+
+    if guard is None:
+        def round_fn(carry, key_t):
+            x, z = carry
+            blk_idx = jax.random.choice(key_t, nblk, (K,),
+                                        replace=False).astype(jnp.int32)
+            x, z, _ = sparse_block_shotgun_round(rows, vals, z, x, blk_idx,
+                                                 lam, beta, y, loss=loss,
+                                                 interpret=interpret)
+            return (x, z), (objective(z, x), jnp.sum(x != 0))
+
+        (x, z), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0), keys)
+        return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                      status=health.status_from_trace(fs))
+
+    p_floor = max(1, min(guard.p_min, K))
+
+    def round_fn(carry, key_t):
+        x, z, gs = carry
+        blk_idx = jax.random.choice(key_t, nblk, (K,),
+                                    replace=False).astype(jnp.int32)
+        x_new, z_new, _ = sparse_block_shotgun_round(
+            rows, vals, z, x, blk_idx, lam, beta, y, loss=loss,
+            interpret=interpret, k_eff=gs.p_eff)
+        x, z, f, gs, _ = health.apply_sentinel(
+            gs, x_new, z_new, objective(z_new, x_new),
+            factor=guard.factor, p_floor=p_floor)
+        return (x, z, gs), (f, jnp.sum(x != 0))
+
+    gs0 = health.init_guard_state(x0, z0, objective(z0, x0), K)
+    (x, z, gs), (fs, nnzs) = jax.lax.scan(round_fn, (x0, z0, gs0), keys)
+    return Result(x=x, z=z, trace=Trace(objective=fs, nnz=nnzs),
+                  status=health.status_from_trace(fs, gs.backoffs))
 
 
 @functools.partial(jax.jit, static_argnames=("K", "rounds", "R", "loss",
-                                             "interpret"))
+                                             "interpret", "guard"))
 def _fused_sparse_solve(rows, vals, y, lam, beta, key, K, rounds, R, loss,
-                        interpret, x0=None):
+                        interpret, x0=None, guard=None):
     """Scan over launches of the fused sparse kernel: one pallas_call per R
     rounds (DESIGN §8.3).
 
     Draws the same per-round keys/indices as ``_sparse_solve`` (and hence
     the dense ``_solve``/``_fused_solve``) for the same key, so all four
-    trajectories coincide.
+    trajectories coincide.  ``guard`` enables launch-granular sentinel
+    rollback exactly as in the dense ``_fused_solve``.
     """
     nblk, tile, block = rows.shape
     n = y.shape[0]
     L = rounds // R
+    mask = jnp.ones(n, jnp.float32)
     x0 = (jnp.zeros(nblk * block, jnp.float32) if x0 is None
           else x0.astype(jnp.float32))
     z0 = bcsc_matvec(rows, vals, x0, n)
     draw = functools.partial(jax.random.choice, a=nblk, shape=(K,),
                              replace=False)
+    keys = jax.random.split(key, rounds).reshape(L, R, -1)
+
+    if guard is None:
+        def launch_fn(carry, keys_l):
+            x, z = carry
+            idx = jax.vmap(lambda kt: draw(kt))(keys_l).astype(jnp.int32)
+            x, z, fs, nnzs, _ = fused_sparse_shotgun_rounds(
+                rows, vals, z, x, idx, lam, beta, y, loss=loss,
+                interpret=interpret)
+            return (x, z), (fs, nnzs)
+
+        (x, z), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0), keys)
+        fs = fs.reshape(rounds)
+        return Result(x=x, z=z,
+                      trace=Trace(objective=fs, nnz=nnzs.reshape(rounds)),
+                      status=health.status_from_trace(fs))
+
+    p_floor = max(1, min(guard.p_min, K))
 
     def launch_fn(carry, keys_l):
-        x, z = carry
+        x, z, gs = carry
         idx = jax.vmap(lambda kt: draw(kt))(keys_l).astype(jnp.int32)
-        x, z, fs, nnzs = fused_sparse_shotgun_rounds(
+        x_new, z_new, fs, nnzs, h = fused_sparse_shotgun_rounds(
             rows, vals, z, x, idx, lam, beta, y, loss=loss,
-            interpret=interpret)
-        return (x, z), (fs, nnzs)
+            interpret=interpret, k_eff=gs.p_eff,
+            guard_f=health.guard_threshold(gs.f_good, guard.factor))
+        x, z, f_rep, gs, bad = health.apply_sentinel(
+            gs, x_new, z_new, fs[-1], factor=guard.factor, p_floor=p_floor,
+            health=h)
+        fs = jnp.where(bad, jnp.full_like(fs, f_rep), fs)
+        nnzs = jnp.where(bad, jnp.full_like(nnzs, jnp.sum(x != 0)), nnzs)
+        return (x, z, gs), (fs, nnzs)
 
-    keys = jax.random.split(key, rounds).reshape(L, R, -1)
-    (x, z), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0), keys)
+    f0 = obj.masked_data_loss(z0, y, mask, loss) + lam * jnp.sum(jnp.abs(x0))
+    gs0 = health.init_guard_state(x0, z0, f0, K)
+    (x, z, gs), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0, gs0), keys)
+    fs = fs.reshape(rounds)
     return Result(x=x, z=z,
-                  trace=Trace(objective=fs.reshape(rounds),
-                              nnz=nnzs.reshape(rounds)))
+                  trace=Trace(objective=fs, nnz=nnzs.reshape(rounds)),
+                  status=health.status_from_trace(fs, gs.backoffs))
 
 
 def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
                         block: int = BLOCK, interpret: bool = True,
                         fused: bool = False, rounds_per_launch: int = 8,
                         tile_n: int | None = None,
-                        x0: jax.Array | None = None) -> Result:
+                        x0: jax.Array | None = None,
+                        guard: GuardConfig | None = None) -> Result:
     """TPU-native Shotgun: K parallel blocks of `block` coordinates/round.
 
     Effective parallelism P = K * block must respect Thm 3.2's
-    P < d/rho + 1 (checked by the caller via ``core.spectral.p_star``).
+    P < d/rho + 1 (checked by the caller via ``core.spectral.p_star``) —
+    or pass ``guard`` (a ``health.GuardConfig``, with ``p_min`` in units of
+    blocks) to enable the divergence sentinel + adaptive-K backoff
+    (DESIGN §9): tripped rounds/launches roll back to the last-good
+    snapshot and the effective block count halves toward ``p_min``.
 
     ``fused=True`` runs ``rounds_per_launch`` rounds per kernel launch with
     the margin held in VMEM (must divide ``rounds``); the trajectory and
@@ -257,12 +385,13 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
             res = _fused_sparse_solve(prob.A.rows, prob.A.vals, prob.y,
                                       prob.lam, prob.beta, key, K, rounds,
                                       rounds_per_launch, prob.loss,
-                                      interpret, x0=x0)
+                                      interpret, x0=x0, guard=guard)
         else:
             res = _sparse_solve(prob.A.rows, prob.A.vals, prob.y, prob.lam,
                                 prob.beta, key, K, rounds, prob.loss,
-                                interpret, x0=x0)
-        return Result(x=res.x[: prob.d], z=res.z, trace=res.trace)
+                                interpret, x0=x0, guard=guard)
+        return Result(x=res.x[: prob.d], z=res.z, trace=res.trace,
+                      status=res.status)
 
     A, y, mask = pad_problem(prob.A, prob.y)
     if x0 is not None:
@@ -276,20 +405,23 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
             tile_n = auto_tile_n(A.shape[0], block, d=A.shape[1])
         res = _fused_solve(A, y, mask.astype(jnp.float32), prob.lam,
                            prob.beta, key, K, rounds, rounds_per_launch,
-                           block, tile_n, prob.loss, interpret, x0=x0)
+                           block, tile_n, prob.loss, interpret, x0=x0,
+                           guard=guard)
     else:
         res = _solve(A, y, mask, prob.lam, prob.beta, key, K, rounds, block,
-                     prob.loss, interpret, x0=x0)
-    return Result(x=res.x[: prob.d], z=res.z[: prob.n], trace=res.trace)
+                     prob.loss, interpret, x0=x0, guard=guard)
+    return Result(x=res.x[: prob.d], z=res.z[: prob.n], trace=res.trace,
+                  status=res.status)
 
 
 def fused_block_shotgun_solve(prob: Problem, key: jax.Array, K: int,
                               rounds: int, rounds_per_launch: int = 8,
                               block: int = BLOCK, tile_n: int | None = None,
                               interpret: bool = True,
-                              x0: jax.Array | None = None) -> Result:
+                              x0: jax.Array | None = None,
+                              guard: GuardConfig | None = None) -> Result:
     """Convenience alias: ``block_shotgun_solve(..., fused=True)``."""
     return block_shotgun_solve(prob, key, K, rounds, block=block,
                                interpret=interpret, fused=True,
                                rounds_per_launch=rounds_per_launch,
-                               tile_n=tile_n, x0=x0)
+                               tile_n=tile_n, x0=x0, guard=guard)

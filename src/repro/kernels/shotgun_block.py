@@ -191,15 +191,25 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
     live local view z_s = z0 + Σ own contributions in VMEM, but additionally
     accumulates those contributions into a Δz scratch and outputs (Δz, x)
     instead of (z, x, f, nnz) — the caller merges Δz across shards (psum)
-    and owns the trace bookkeeping."""
+    and owns the trace bookkeeping.
+
+    Divergence sentinel (DESIGN §9): the scalar-prefetch vector carries
+    ``k_eff`` (blocks past it get their delta masked to zero — the in-kernel
+    half of adaptive-P backoff; at k_eff == K the mask multiplies by exactly
+    1.0) and a guard objective level; the kernel max-accumulates a (1, 1)
+    health output that goes 1.0 the first round the objective crosses the
+    guard or goes non-finite (engine variant: the margin view goes
+    non-finite), so the caller detects an in-launch divergence from one
+    scalar instead of scanning the trace."""
     single = T == 1
 
     def kernel(idx_ref, scal_ref, a_ref, z0_ref, x0_ref, y_ref, m_ref,
                *refs):
         if emit_dz:
-            (dzo_ref, xo_ref, z_s, dz_s, r_s, x_s, g_s, d_s) = refs
+            (dzo_ref, xo_ref, h_ref, z_s, dz_s, r_s, x_s, g_s, d_s) = refs
         else:
-            (zo_ref, xo_ref, f_ref, nnz_ref, z_s, r_s, x_s, g_s, d_s) = refs
+            (zo_ref, xo_ref, f_ref, nnz_ref, h_ref,
+             z_s, r_s, x_s, g_s, d_s) = refs
         r_id = pl.program_id(0)
         k_id = pl.program_id(1)
         if single:
@@ -215,11 +225,14 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
             first_step = (r_id == 0) & (k_id == 0) & gather_on & (t_id == 0)
         lam = scal_ref[0]
         beta = scal_ref[1]
+        k_eff = scal_ref[2].astype(jnp.int32)
+        guard = scal_ref[3]
 
         @pl.when(first_step)
         def _init_launch():
             z_s[...] = z0_ref[...]
             x_s[...] = x0_ref[...]
+            h_ref[0, 0] = jnp.float32(0.0)
             if emit_dz:
                 dz_s[...] = jnp.zeros_like(dz_s)
 
@@ -250,7 +263,10 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
                 x_sel = x_s[pl.ds(b, 1), :]
                 g = g_s[pl.ds(k_id, 1), :]
                 x_new = _soft_threshold(x_sel - g / beta, lam / beta)
-                d_s[pl.ds(k_id, 1), :] = x_new - x_sel
+                # Backoff mask: blocks at or past k_eff contribute nothing
+                # this round (multiply by exactly 1.0 when k_eff == K).
+                live = jnp.where(k_id < k_eff, 1.0, 0.0).astype(jnp.float32)
+                d_s[pl.ds(k_id, 1), :] = (x_new - x_sel) * live
 
         @pl.when(scatter_on)
         def _scatter_phase():
@@ -275,10 +291,18 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
                 if emit_dz:
                     dzo_ref[...] = dz_s[...]
                     xo_ref[...] = x_s[...]
+                    # Engine variant has no in-kernel objective; the health
+                    # scalar trips on a non-finite margin view instead.
+                    ok = jnp.all(jnp.isfinite(z_s[...]))
+                    h_ref[0, 0] = jnp.maximum(
+                        h_ref[0, 0], jnp.where(ok, 0.0, 1.0))
                 else:
-                    f_ref[0, 0] = _round_objective(z_s[...], y_ref[...],
-                                                   m_ref[...], x_s[...],
-                                                   lam, loss)
+                    f = _round_objective(z_s[...], y_ref[...], m_ref[...],
+                                         x_s[...], lam, loss)
+                    f_ref[0, 0] = f
+                    bad = ~jnp.isfinite(f) | (f > guard)
+                    h_ref[0, 0] = jnp.maximum(
+                        h_ref[0, 0], jnp.where(bad, 1.0, 0.0))
                     nnz_ref[0, 0] = jnp.sum((x_s[...] != 0).astype(jnp.int32))
                     zo_ref[...] = z_s[...]
                     xo_ref[...] = x_s[...]
@@ -287,8 +311,12 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
 
 
 def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
-                interpret, emit_dz):
-    """Shared pallas_call plumbing for both fused-kernel variants."""
+                interpret, emit_dz, k_eff=None, guard_f=None):
+    """Shared pallas_call plumbing for both fused-kernel variants.
+
+    ``k_eff`` (dynamic scalar, defaults to K) and ``guard_f`` (objective
+    guard level, defaults to +inf = never trips) ride in the scalar-prefetch
+    vector so a backoff changes no shapes and triggers no recompilation."""
     n, d = A.shape
     R, K = blk_idx.shape
     if tile_n is None:
@@ -299,8 +327,11 @@ def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
     single = T == 1
 
     idx = blk_idx.astype(jnp.int32)
+    k_eff = jnp.asarray(K if k_eff is None else k_eff, jnp.float32)
+    guard_f = jnp.asarray(jnp.inf if guard_f is None else guard_f,
+                          jnp.float32)
     scal = jnp.stack([jnp.asarray(lam, jnp.float32),
-                      jnp.asarray(beta, jnp.float32)])
+                      jnp.asarray(beta, jnp.float32), k_eff, guard_f])
     z0 = z.reshape(n, 1).astype(jnp.float32)
     x0 = x.reshape(nblk, block).astype(jnp.float32)
     y2 = y.reshape(n, 1).astype(jnp.float32)
@@ -321,10 +352,12 @@ def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
         out_specs = [
             pl.BlockSpec((n, 1), const),            # Δz
             pl.BlockSpec((nblk, block), const),     # x
+            pl.BlockSpec((1, 1), const),            # health scalar
         ]
         out_shape = [
             jax.ShapeDtypeStruct((n, 1), jnp.float32),
             jax.ShapeDtypeStruct((nblk, block), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ]
         extra_scratch = [pltpu.VMEM((n, 1), jnp.float32)]   # Δz accumulator
     else:
@@ -333,12 +366,14 @@ def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
             pl.BlockSpec((nblk, block), const),     # x
             pl.BlockSpec((1, 1), f_map),            # f trace
             pl.BlockSpec((1, 1), f_map),            # nnz trace
+            pl.BlockSpec((1, 1), const),            # health scalar
         ]
         out_shape = [
             jax.ShapeDtypeStruct((n, 1), jnp.float32),
             jax.ShapeDtypeStruct((nblk, block), jnp.float32),
             jax.ShapeDtypeStruct((R, 1), jnp.float32),
             jax.ShapeDtypeStruct((R, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ]
         extra_scratch = []
 
@@ -374,7 +409,8 @@ def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
                    static_argnames=("loss", "block", "tile_n", "interpret"))
 def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
                          loss: str = LASSO, block: int = BLOCK,
-                         tile_n: int | None = None, interpret: bool = False):
+                         tile_n: int | None = None, interpret: bool = False,
+                         k_eff=None, guard_f=None):
     """R Block-Shotgun rounds in ONE pallas_call.
 
     A        (n, d) design, f32 or bf16 (bf16 halves streamed bytes; all
@@ -383,16 +419,24 @@ def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
              mask from ``ops.pad_problem``.
     blk_idx  (R, K) int32 — round t updates aligned coordinate blocks
              blk_idx[t, 0..K-1] (duplicates allowed, multiset semantics).
+    k_eff    dynamic effective block count (DESIGN §9): blocks k >= k_eff
+             are drawn but masked out — the adaptive-P backoff knob.  None
+             (default) means all K live, bit-exactly.
+    guard_f  objective guard level: the health output trips when a round's
+             F exceeds it (or goes non-finite).  None = +inf = finite-only.
 
-    Returns (x_new (d,) f32, z_new (n,) f32, f (R,) f32, nnz (R,) int32)
-    with per-round objective/nnz traces computed in-kernel.
+    Returns (x_new (d,) f32, z_new (n,) f32, f (R,) f32, nnz (R,) int32,
+    health () f32) with per-round objective/nnz traces computed in-kernel;
+    ``health`` is 1.0 iff any round tripped the in-kernel sentinel.
     """
     n, d = A.shape
     R = blk_idx.shape[0]
-    z_new, x_new, f, nnz = _fused_call(A, z, x, blk_idx, lam, beta, y, mask,
-                                       loss, block, tile_n, interpret,
-                                       emit_dz=False)
-    return (x_new.reshape(d), z_new.reshape(n), f.reshape(R), nnz.reshape(R))
+    z_new, x_new, f, nnz, h = _fused_call(A, z, x, blk_idx, lam, beta, y,
+                                          mask, loss, block, tile_n,
+                                          interpret, emit_dz=False,
+                                          k_eff=k_eff, guard_f=guard_f)
+    return (x_new.reshape(d), z_new.reshape(n), f.reshape(R), nnz.reshape(R),
+            h.reshape(()))
 
 
 @functools.partial(jax.jit,
@@ -400,7 +444,7 @@ def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
 def fused_shotgun_delta_rounds(A, z, x, blk_idx, lam, beta, y, mask,
                                loss: str = LASSO, block: int = BLOCK,
                                tile_n: int | None = None,
-                               interpret: bool = False):
+                               interpret: bool = False, k_eff=None):
     """Shard-local fused engine kernel: R rounds against a margin *snapshot*.
 
     Same dataflow as ``fused_shotgun_rounds`` — z/r/x/g/δ resident in VMEM,
@@ -412,12 +456,17 @@ def fused_shotgun_delta_rounds(A, z, x, blk_idx, lam, beta, y, mask,
     sees its own rounds immediately; other shards' rounds arrive only at the
     next merge — the staleness the ``merge="launch"`` mode trades off.
 
-    Returns (x_new (d,) f32, dz (n,) f32).
+    ``k_eff`` masks blocks past the backoff point (see
+    ``fused_shotgun_rounds``); there is no in-kernel objective here, so the
+    health output trips only on a non-finite margin view.
+
+    Returns (x_new (d,) f32, dz (n,) f32, health () f32).
     """
     n, d = A.shape
-    dz, x_new = _fused_call(A, z, x, blk_idx, lam, beta, y, mask,
-                            loss, block, tile_n, interpret, emit_dz=True)
-    return x_new.reshape(d), dz.reshape(n)
+    dz, x_new, h = _fused_call(A, z, x, blk_idx, lam, beta, y, mask,
+                               loss, block, tile_n, interpret, emit_dz=True,
+                               k_eff=k_eff)
+    return x_new.reshape(d), dz.reshape(n), h.reshape(())
 
 
 def auto_tile_n(n: int, block: int = BLOCK, d: int = 0,

@@ -196,24 +196,34 @@ def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
     local view z_s = z0 + Σ own contributions in VMEM, but additionally
     accumulates those contributions into a Δz scratch and outputs (Δz, x)
     instead of (z, x, f, nnz) — the caller merges Δz across shards (psum)
-    and owns the trace bookkeeping."""
+    and owns the trace bookkeeping.
+
+    Divergence sentinel (DESIGN §9): like the dense fused kernel, the
+    scalar-prefetch vector carries ``k_eff`` (blocks past it have their
+    delta masked to zero; exactly 1.0 at k_eff == K) and a guard objective
+    level, and a (1, 1) max-accumulated health output trips on a
+    guard-crossing / non-finite round."""
 
     def kernel(idx_ref, scal_ref, rows_ref, vals_ref, z0_ref, x0_ref, y_ref,
                *refs):
         if emit_dz:
-            (dzo_ref, xo_ref, z_s, dz_s, r_s, x_s, d_s) = refs
+            (dzo_ref, xo_ref, h_ref, z_s, dz_s, r_s, x_s, d_s) = refs
         else:
-            (zo_ref, xo_ref, f_ref, nnz_ref, z_s, r_s, x_s, d_s) = refs
+            (zo_ref, xo_ref, f_ref, nnz_ref, h_ref, z_s, r_s, x_s,
+             d_s) = refs
         r_id = pl.program_id(0)
         k_id = pl.program_id(1)
         lam = scal_ref[0]
         beta = scal_ref[1]
+        k_eff = scal_ref[2].astype(jnp.int32)
+        guard = scal_ref[3]
         one = jnp.float32(1.0)       # no sample padding on the sparse path
 
         @pl.when((r_id == 0) & (k_id == 0))
         def _init_launch():
             z_s[...] = z0_ref[...]
             x_s[...] = x0_ref[...]
+            h_ref[0, 0] = jnp.float32(0.0)
             if emit_dz:
                 dz_s[...] = jnp.zeros_like(dz_s)
 
@@ -229,7 +239,10 @@ def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
         # only updated at round end), so duplicate block draws within a
         # round reproduce Alg. 2's multiset semantics exactly; the gathers
         # all read the round-start residual r_s, untouched by the scatters.
-        dlt = block_delta(x_s[pl.ds(b, 1), :], g, lam, beta)
+        # Backoff mask: blocks at or past k_eff contribute nothing this
+        # round (multiply by exactly 1.0 when k_eff == K).
+        live = jnp.where(k_id < k_eff, 1.0, 0.0).astype(jnp.float32)
+        dlt = block_delta(x_s[pl.ds(b, 1), :], g, lam, beta) * live
         d_s[pl.ds(k_id, 1), :] = dlt
         n = z_s.shape[0]
         z_s[...] = _tile_scatter(z_s[...].reshape(-1), rows, vals,
@@ -251,9 +264,16 @@ def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
             if emit_dz:
                 dzo_ref[...] = dz_s[...]
                 xo_ref[...] = x_s[...]
+                ok = jnp.all(jnp.isfinite(z_s[...]))
+                h_ref[0, 0] = jnp.maximum(
+                    h_ref[0, 0], jnp.where(ok, 0.0, 1.0))
             else:
-                f_ref[0, 0] = _round_objective(z_s[...], y_ref[...], one,
-                                               x_s[...], lam, loss)
+                f = _round_objective(z_s[...], y_ref[...], one,
+                                     x_s[...], lam, loss)
+                f_ref[0, 0] = f
+                bad = ~jnp.isfinite(f) | (f > guard)
+                h_ref[0, 0] = jnp.maximum(
+                    h_ref[0, 0], jnp.where(bad, 1.0, 0.0))
                 nnz_ref[0, 0] = jnp.sum((x_s[...] != 0).astype(jnp.int32))
                 zo_ref[...] = z_s[...]
                 xo_ref[...] = x_s[...]
@@ -262,15 +282,21 @@ def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
 
 
 def _fused_sparse_call(rows, vals, z, x, blk_idx, lam, beta, y, loss,
-                       interpret, emit_dz):
-    """Shared pallas_call plumbing for both fused-sparse variants."""
+                       interpret, emit_dz, k_eff=None, guard_f=None):
+    """Shared pallas_call plumbing for both fused-sparse variants.
+
+    ``k_eff`` (dynamic, defaults to K) and ``guard_f`` (defaults to +inf)
+    ride in the scalar-prefetch vector — see the dense ``_fused_call``."""
     nblk, tile, block = rows.shape
     n = z.shape[0]
     R, K = blk_idx.shape
 
     idx = blk_idx.astype(jnp.int32)
+    k_eff = jnp.asarray(K if k_eff is None else k_eff, jnp.float32)
+    guard_f = jnp.asarray(jnp.inf if guard_f is None else guard_f,
+                          jnp.float32)
     scal = jnp.stack([jnp.asarray(lam, jnp.float32),
-                      jnp.asarray(beta, jnp.float32)])
+                      jnp.asarray(beta, jnp.float32), k_eff, guard_f])
     z0 = z.reshape(n, 1).astype(jnp.float32)
     x0 = x.reshape(nblk, block).astype(jnp.float32)
     y2 = y.reshape(n, 1).astype(jnp.float32)
@@ -283,10 +309,12 @@ def _fused_sparse_call(rows, vals, z, x, blk_idx, lam, beta, y, loss,
         out_specs = [
             pl.BlockSpec((n, 1), const),            # Δz
             pl.BlockSpec((nblk, block), const),     # x
+            pl.BlockSpec((1, 1), const),            # health scalar
         ]
         out_shape = [
             jax.ShapeDtypeStruct((n, 1), jnp.float32),
             jax.ShapeDtypeStruct((nblk, block), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ]
         extra_scratch = [pltpu.VMEM((n, 1), jnp.float32)]   # Δz accumulator
     else:
@@ -295,12 +323,14 @@ def _fused_sparse_call(rows, vals, z, x, blk_idx, lam, beta, y, loss,
             pl.BlockSpec((nblk, block), const),     # x
             pl.BlockSpec((1, 1), f_map),            # f trace
             pl.BlockSpec((1, 1), f_map),            # nnz trace
+            pl.BlockSpec((1, 1), const),            # health scalar
         ]
         out_shape = [
             jax.ShapeDtypeStruct((n, 1), jnp.float32),
             jax.ShapeDtypeStruct((nblk, block), jnp.float32),
             jax.ShapeDtypeStruct((R, 1), jnp.float32),
             jax.ShapeDtypeStruct((R, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ]
         extra_scratch = []
 
@@ -333,48 +363,54 @@ def _fused_sparse_call(rows, vals, z, x, blk_idx, lam, beta, y, loss,
 
 @functools.partial(jax.jit, static_argnames=("loss", "interpret"))
 def fused_sparse_shotgun_rounds(rows, vals, z, x, blk_idx, lam, beta, y,
-                                loss: str = LASSO, interpret: bool = False):
+                                loss: str = LASSO, interpret: bool = False,
+                                k_eff=None, guard_f=None):
     """R Block-Shotgun rounds over BlockedCSC tiles in ONE pallas_call.
 
     rows/vals  (nblk, tile, block) BlockedCSC nnz tiles (DESIGN §8).
     z          (n,) margin A x;  x (nblk·block,) iterate;  y (n,).
     blk_idx    (R, K) int32 — round t updates aligned coordinate blocks
                blk_idx[t, 0..K-1] (duplicates allowed, multiset semantics).
+    k_eff      dynamic effective block count (backoff mask, DESIGN §9);
+               None = all K live, bit-exactly.
+    guard_f    objective guard level for the health output; None = +inf.
 
     Returns (x_new (nblk·block,) f32, z_new (n,) f32, f (R,) f32,
-    nnz (R,) int32) with per-round objective/nnz traces computed in-kernel —
-    the same contract as the dense ``fused_shotgun_rounds`` but with
-    O(tile·128) bytes of A per grid step instead of O(n·128).
+    nnz (R,) int32, health () f32) with per-round objective/nnz traces
+    computed in-kernel — the same contract as the dense
+    ``fused_shotgun_rounds`` but with O(tile·128) bytes of A per grid step
+    instead of O(n·128).
     """
     nblk, tile, block = rows.shape
     n = z.shape[0]
     R = blk_idx.shape[0]
-    z_new, x_new, f, nnz = _fused_sparse_call(
+    z_new, x_new, f, nnz, h = _fused_sparse_call(
         rows, vals, z, x, blk_idx, lam, beta, y, loss, interpret,
-        emit_dz=False)
+        emit_dz=False, k_eff=k_eff, guard_f=guard_f)
     return (x_new.reshape(nblk * block), z_new.reshape(n),
-            f.reshape(R), nnz.reshape(R))
+            f.reshape(R), nnz.reshape(R), h.reshape(()))
 
 
 @functools.partial(jax.jit, static_argnames=("loss", "interpret"))
 def fused_sparse_shotgun_delta_rounds(rows, vals, z, x, blk_idx, lam, beta,
                                       y, loss: str = LASSO,
-                                      interpret: bool = False):
+                                      interpret: bool = False, k_eff=None):
     """Shard-local fused sparse engine kernel: R rounds against a margin
     *snapshot* (DESIGN §3).  Same dataflow as ``fused_sparse_shotgun_rounds``
     but the kernel does not own the global margin: ``z`` is the last merged
     global snapshot, the live VMEM view tracks only the shard's OWN updates
     on top of it, and the contributions are additionally accumulated into a
-    Δz = A_shard δx output for the caller to all-reduce.
+    Δz = A_shard δx output for the caller to all-reduce.  ``k_eff`` masks
+    blocks past the backoff point; health trips on a non-finite margin view.
 
-    Returns (x_new (nblk·block,) f32, dz (n,) f32).
+    Returns (x_new (nblk·block,) f32, dz (n,) f32, health () f32).
     """
     nblk, tile, block = rows.shape
     n = z.shape[0]
-    dz, x_new = _fused_sparse_call(
+    dz, x_new, h = _fused_sparse_call(
         rows, vals, z, x, blk_idx, lam, beta, y, loss, interpret,
-        emit_dz=True)
-    return x_new.reshape(nblk * block), dz.reshape(n)
+        emit_dz=True, k_eff=k_eff)
+    return x_new.reshape(nblk * block), dz.reshape(n), h.reshape(())
 
 
 def fused_sparse_vmem_bytes(n: int, nblk: int, tile: int, K: int,

@@ -36,6 +36,7 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    evictions: int = 0          # round-deadline evictions survived
 
 
 class Engine:
@@ -49,6 +50,7 @@ class Engine:
         self.cache = M.init_cache(cfg, batch, max_len)
         self.pos = jnp.zeros(batch, jnp.int32)       # next position per slot
         self.slots: list[Request | None] = [None] * batch
+        self.age = [0] * batch     # decode steps since the slot was admitted
 
         cfgc = cfg
 
@@ -78,13 +80,23 @@ class Engine:
         self._decode = _decode
 
     def admit(self, req: Request, slot: int):
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        # context = prompt + everything generated so far: a fresh request
+        # prefills its prompt, a deadline-evicted one re-prefills its whole
+        # partial generation into the new slot and continues where it left
+        # off (the KV it lost at eviction is rebuilt here, DESIGN §9.5)
+        ctx = (np.concatenate([req.prompt, np.asarray(req.out, np.int32)])
+               if req.out else req.prompt)
+        toks = jnp.asarray(ctx, jnp.int32)[None, :]
         last_logits, self.cache = self._prefill_into(
             self.params, self.cache, toks, slot, self.pos)
-        first = int(jnp.argmax(last_logits[0]))
-        req.out.append(first)
+        nxt = int(jnp.argmax(last_logits[0]))
+        req.out.append(nxt)
         self.slots[slot] = req
-        self.pos = self.pos.at[slot].set(len(req.prompt))
+        self.pos = self.pos.at[slot].set(len(ctx))
+        self.age[slot] = 0
+        if nxt == self.eos_id or len(req.out) >= req.max_new \
+                or len(ctx) + 1 >= self.max_len:
+            req.done = True
 
     def step(self):
         toks = jnp.array([[r.out[-1] if r else 0] for r in self.slots], jnp.int32)
@@ -96,6 +108,7 @@ class Engine:
                 continue
             t = int(nxt[i])
             r.out.append(t)
+            self.age[i] += 1
             if t == self.eos_id or len(r.out) >= r.max_new:
                 r.done = True
 
@@ -105,7 +118,18 @@ class Engine:
 
 def serve(arch: str, *, requests: int = 12, batch: int = 4, max_new: int = 24,
           prompt_len: int = 16, max_len: int = 128, seed: int = 0,
-          smoke: bool = True, quiet: bool = False):
+          smoke: bool = True, quiet: bool = False,
+          max_rounds: int | None = None, max_evictions: int = 2):
+    """Run the continuous-batching loop.
+
+    ``max_rounds`` is the per-slot round deadline (decode steps since the
+    slot was admitted): a slot that hasn't finished within the deadline is
+    evicted and its request re-queued at the tail — stragglers can't pin a
+    slot forever and fresh requests get served in between (the serving-layer
+    analogue of the solver's §9 backoff).  A request evicted more than
+    ``max_evictions`` times is given up on (marked done with whatever it
+    generated).  ``max_rounds=None`` disables the deadline.
+    """
     mod = ARCHS[arch]
     cfg = mod.smoke_config() if smoke else mod.CONFIG
     if cfg.is_encdec:
@@ -129,6 +153,17 @@ def serve(arch: str, *, requests: int = 12, batch: int = 4, max_new: int = 24,
         if any(r and not r.done for r in eng.slots):
             eng.step()
             steps += 1
+        if max_rounds is not None:
+            for i, r in enumerate(eng.slots):
+                if r is None or r.done or eng.age[i] < max_rounds:
+                    continue
+                r.evictions += 1
+                eng.slots[i] = None
+                if r.evictions > max_evictions:
+                    r.done = True            # give up; keep partial output
+                    finished.append(r)
+                else:
+                    queue.append(r)          # re-queue at the tail
     finished.extend(r for r in eng.slots if r is not None)
     dt = time.time() - t0
     toks = sum(len(r.out) for r in finished)
@@ -149,9 +184,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-rounds", type=int, default=None,
+                    help="per-slot round deadline (decode steps) before "
+                         "eviction + re-queue")
+    ap.add_argument("--max-evictions", type=int, default=2)
     a = ap.parse_args()
     serve(a.arch, requests=a.requests, batch=a.batch, max_new=a.max_new,
-          prompt_len=a.prompt_len, max_len=a.max_len)
+          prompt_len=a.prompt_len, max_len=a.max_len,
+          max_rounds=a.max_rounds, max_evictions=a.max_evictions)
 
 
 if __name__ == "__main__":

@@ -44,7 +44,7 @@ def test_fused_rounds_match_oracle(loss, tile_n):
     R, K = 8, 2
     idx = _idx_with_duplicates(Ap.shape[1] // BLOCK, R, K)
 
-    xk, zk, fk, nk = fused_shotgun_rounds(
+    xk, zk, fk, nk, _h = fused_shotgun_rounds(
         Ap, z, x, idx, prob.lam, prob.beta, yp, mask, loss=loss,
         tile_n=tile_n, interpret=True)
     xr, zr, fr, nr = ref.fused_shotgun_rounds_ref(
@@ -67,7 +67,7 @@ def test_fused_padded_coordinates_stay_zero():
     z0 = jnp.zeros(Ap.shape[0], jnp.float32)
     nblk = Ap.shape[1] // BLOCK
     idx = jnp.tile(jnp.arange(nblk, dtype=jnp.int32), (8, 1))[:, :nblk]
-    xk, zk, fk, _ = fused_shotgun_rounds(
+    xk, zk, fk, _, _h = fused_shotgun_rounds(
         Ap, z0, x0, idx, prob.lam, prob.beta, yp, mask, loss=obj.LASSO,
         interpret=True)
     np.testing.assert_allclose(np.asarray(xk[prob.d:]), 0.0)
@@ -84,7 +84,7 @@ def test_fused_bf16_storage():
     Abf = Ap.astype(jnp.bfloat16)
     x, z = _warm_start(Ap)
     idx = _idx_with_duplicates(Ap.shape[1] // BLOCK, 8, 2)
-    xk, zk, fk, nk = fused_shotgun_rounds(
+    xk, zk, fk, nk, _h = fused_shotgun_rounds(
         Abf, z, x, idx, prob.lam, prob.beta, yp, mask,
         loss=obj.LASSO, interpret=True)
     xr, zr, fr, nr = ref.fused_shotgun_rounds_ref(
@@ -97,10 +97,10 @@ def test_fused_bf16_storage():
     # cold start (convergent regime): bf16 storage tracks the f32 objective
     x0 = jnp.zeros_like(x)
     z0 = jnp.zeros_like(z)
-    _, _, f16, _ = fused_shotgun_rounds(
+    _, _, f16, _, _ = fused_shotgun_rounds(
         Abf, z0, x0, idx, prob.lam, prob.beta, yp, mask, loss=obj.LASSO,
         interpret=True)
-    _, _, f32_, _ = fused_shotgun_rounds(
+    _, _, f32_, _, _ = fused_shotgun_rounds(
         Ap, z0, x0, idx, prob.lam, prob.beta, yp, mask, loss=obj.LASSO,
         interpret=True)
     np.testing.assert_allclose(np.asarray(f16), np.asarray(f32_), rtol=2e-2)

@@ -236,7 +236,7 @@ def test_fused_sparse_kernel_matches_refs(category):
     y = jnp.asarray(y, jnp.float32)
     lam, beta = 0.5, 1.0
 
-    xk, zk, fk, nnzk = fused_sparse_shotgun_rounds(
+    xk, zk, fk, nnzk, _h = fused_sparse_shotgun_rounds(
         S.rows, S.vals, z, x, idx, lam, beta, y, interpret=True)
     xs, zs, fs, nnzs = ref.fused_sparse_shotgun_rounds_ref(
         S.rows, S.vals, z, x, idx, lam, beta, y, "lasso")
@@ -267,7 +267,7 @@ def test_fused_sparse_delta_rounds_matches_ref():
     z = S.matvec(x)
     y = jnp.asarray(y, jnp.float32)
 
-    xk, dzk = fused_sparse_shotgun_delta_rounds(
+    xk, dzk, _h = fused_sparse_shotgun_delta_rounds(
         S.rows, S.vals, z, x, idx, 0.5, 1.0, y, interpret=True)
     xs, dzs = ref.fused_sparse_shotgun_delta_rounds_ref(
         S.rows, S.vals, z, x, idx, 0.5, 1.0, y, "lasso")
