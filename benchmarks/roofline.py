@@ -12,6 +12,7 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
 # v4-class TPU used for the per-round analytic model
 HBM_GBPS = 1200e9
 MXU_FLOPS = 275e12
+ICI_GBPS = 45e9     # per-link ICI bandwidth — floor for the Δz merge time
 
 
 def shotgun_round_model(n, d, K, block=128, a_bytes=4, fused_single=None):
@@ -46,11 +47,12 @@ def shotgun_round_model(n, d, K, block=128, a_bytes=4, fused_single=None):
     return rows
 
 
-def sparse_round_model(n, d, K, tile, block=128, R=8):
+def sparse_round_model(n, d, K, tile, block=128, R=8, val_bytes=4):
     """Per-round HBM bytes/flops of the Block-Shotgun round variants on a
     dense design vs a BlockedCSC one (DESIGN §8).  Sparse tiles carry both
-    int32 row indices and f32 values (8 B/slot); the dense two-kernel round
-    streams whole (n × block) column blocks twice.  The fused sparse round
+    int32 row indices and values ((4 + ``val_bytes``) B/slot — 8 for f32
+    vals, 6 for bf16 vals via ``BlockedCSC.astype``); the dense two-kernel
+    round streams whole (n × block) column blocks twice.  The fused sparse round
     (DESIGN §8.3) fetches each selected block's nnz tiles ONCE per round
     (one grid step serves both gather and scatter) and keeps z/Δz/r/x in
     VMEM for all ``R`` rounds of a launch, so the z/x vector traffic is
@@ -61,7 +63,8 @@ def sparse_round_model(n, d, K, tile, block=128, R=8):
     dense = shotgun_round_model(n, d, K, block=block)["two_kernel"]
     d_pad = -(-d // block) * block
     vec = n * 4
-    sp_bytes = 2 * K * tile * block * 8 + 6 * vec + 4 * K * block * 4
+    slot = 4 + val_bytes                         # int32 row + stored value
+    sp_bytes = 2 * K * tile * block * slot + 6 * vec + 4 * K * block * 4
     sp_flops = 2 * 2 * K * tile * block          # madd per nnz, each phase
     sparse = {"bytes": sp_bytes, "flops": sp_flops,
               "intensity": sp_flops / sp_bytes,
@@ -69,7 +72,7 @@ def sparse_round_model(n, d, K, tile, block=128, R=8):
     # fused: one (tile × block) rows+vals fetch per block per round; the
     # per-launch z0/y input + z output (3 n-vectors) and the two full-
     # width x transfers (x0 in, x out — 2·d_pad) amortize over R rounds.
-    fu_bytes = K * tile * block * 8 + (3 * vec + 2 * d_pad * 4) / R
+    fu_bytes = K * tile * block * slot + (3 * vec + 2 * d_pad * 4) / R
     fu_flops = 2 * 2 * K * tile * block          # same madds, one fetch
     fused = {"bytes": fu_bytes, "flops": fu_flops,
              "intensity": fu_flops / fu_bytes,
@@ -79,7 +82,7 @@ def sparse_round_model(n, d, K, tile, block=128, R=8):
         "hbm_bytes_ratio": dense["bytes"] / sp_bytes,
         "hbm_bytes_ratio_fused": dense["bytes"] / fu_bytes,
         "storage_bytes_dense": 4 * n * d,
-        "storage_bytes_bcsc": 8 * tile * d_pad,
+        "storage_bytes_bcsc": slot * tile * d_pad,
     }
 
 
@@ -98,10 +101,14 @@ def sharded_merge_model(n, merge_rounds=1, scheme="none", topk_frac=0.01,
         "wire_bytes_per_merge": per_merge,
         "wire_bytes_per_round": per_merge / merge_rounds,
         "slow_hop_bytes_per_round": per_merge / merge_rounds / inner,
+        # ICI-bandwidth floor on the merge's wall time — bench_sharded uses
+        # it to keep the exposed-wire accounting positive when the measured
+        # sync/async difference drowns in host-emulation timing noise
+        "wire_us_per_merge": per_merge / ICI_GBPS * 1e6,
     }
 
 
-def sharded_wire_table(n=2048, schemes=("none", "int8", "topk")):
+def sharded_wire_table(n=2048, schemes=("none", "bf16", "int8", "topk")):
     out = [f"{'scheme':8s} {'merge':>6s} {'B/merge':>10s} {'B/round':>10s} "
            f"{'slow hop/round (inner=4)':>24s}"]
     for scheme in schemes:

@@ -32,6 +32,21 @@ padding, and the Δz merge):
       sentinel — non-finite Δz (or, for the fused engines, the in-kernel
       health output).
 
+  ``engine.run_segment(A_blk, y, mask, lam, beta, z, w_pend, x_l, keys,
+      p_eff) -> (x_l, dz, health)``
+      the pipelined-mode entry (DESIGN §3.4): one merge window against the
+      *stale* merged margin ``z`` plus the shard's own not-yet-merged wire
+      contribution ``w_pend`` from the previous segment.  The emitted Δz is
+      relative to ``z + w_pend``, so the driver's catch-up
+      ``z + psum(w_pend)`` counts each shard's pending wire exactly once.
+      The shared default simply calls ``run`` on ``z + w_pend`` — exact for
+      every engine because ``run`` only ever reads the margin through an
+      additive base (``z + dz_partial`` in the scan engines, the VMEM-
+      resident view seeded from ``z`` in the fused kernels).  The seam
+      exists so an engine with its own overlap schedule (e.g. a kernel that
+      double-buffers the wire in VMEM) can override it without touching the
+      driver.
+
   ``engine.p_full``
       the engine's full parallelism in the same units, for initializing the
       driver's ``p_eff`` carry.
@@ -61,6 +76,15 @@ from repro.core import objectives as obj
 ENGINE_NAMES = ("scalar", "block", "fused", "sparse_block", "sparse_fused")
 
 
+def _run_segment(self, A_blk, y, mask, lam, beta, z, w_pend, x_l, keys,
+                 p_eff):
+    """Shared ``run_segment`` implementation (assigned as a class attribute
+    on each engine — plain functions are descriptors, so it binds like a
+    method): fold the pending wire into the margin base and run the window.
+    """
+    return self.run(A_blk, y, mask, lam, beta, z + w_pend, x_l, keys, p_eff)
+
+
 class ScalarEngine(NamedTuple):
     """The original per-coordinate jnp engine (trajectory-preserving).
 
@@ -74,6 +98,7 @@ class ScalarEngine(NamedTuple):
     loss: str
 
     fold_always = True
+    run_segment = _run_segment
 
     @property
     def p_full(self):
@@ -109,6 +134,7 @@ class BlockEngine(NamedTuple):
     interpret: bool = True
 
     fold_always = False
+    run_segment = _run_segment
 
     @property
     def p_full(self):
@@ -153,6 +179,7 @@ class FusedEngine(NamedTuple):
     interpret: bool = True
 
     fold_always = False
+    run_segment = _run_segment
 
     @property
     def p_full(self):
@@ -184,6 +211,7 @@ class SparseBlockEngine(NamedTuple):
     interpret: bool = True
 
     fold_always = False
+    run_segment = _run_segment
 
     @property
     def p_full(self):
@@ -231,6 +259,7 @@ class SparseFusedEngine(NamedTuple):
     interpret: bool = True
 
     fold_always = False
+    run_segment = _run_segment
 
     @property
     def p_full(self):

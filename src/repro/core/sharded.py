@@ -27,6 +27,20 @@ Two merge cadences:
                        interference/staleness trade-off (Lemma 3.3) as an
                        explicit knob, paying 1/R of the collective traffic.
 
+``pipeline=True`` software-pipelines the merge itself (DESIGN §3.4): the
+carry holds the shard's own not-yet-merged wire ``w_pend`` from the previous
+segment, each step issues the psum of ``w_pend`` — which the current
+segment's engine launch does not read, so the collective and the compute
+have no data dependence and XLA's latency-hiding scheduler can overlap them
+— while the engine runs against the view ``z + w_pend`` (own updates
+visible, other shards' one segment stale).  The catch-up ``z + psum(w_pend)``
+counts the shard's own pending wire exactly once, an epilogue merge drains
+the final in-flight segment, and on one shard the view equals the fully
+merged margin, so 1-shard pipelined reproduces 1-shard synchronous exactly.
+Net effect: one extra segment of staleness for *other* shards' updates
+(Lemma 3.3's budget, now with R_eff = 2R) buys the wire off the critical
+path.
+
 The Δz all-reduce optionally routes through the §7 wire layer: int8/top-k
 compression with error feedback (``dist/compression.py``; the psum carries
 the receiver-side dense reconstruction, ``wire_bytes`` does the byte
@@ -57,7 +71,7 @@ from repro.core.shotgun import Result, Trace
 from repro.data.sparse import BlockedCSC, pad_feature_blocks
 
 MERGE_MODES = ("round", "launch")
-COMPRESSION_SCHEMES = ("none", "int8", "topk")
+COMPRESSION_SCHEMES = ("none", "bf16", "int8", "topk")
 
 _FAULT_SALT = 0x5EED  # fault keys branch off the solve key here (DESIGN §9.3)
 
@@ -93,13 +107,14 @@ def _compress_dz(dz, ef, scheme: str, topk_frac: float):
 
 @functools.partial(jax.jit, static_argnames=(
     "engine", "rounds", "merge_rounds", "mesh", "trace_every",
-    "compression", "topk_frac", "hierarchical", "guard", "faults"))
+    "compression", "topk_frac", "hierarchical", "guard", "faults",
+    "pipeline"))
 def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
                   merge_rounds: int, mesh: Mesh, trace_every: int,
                   compression: str = "none", topk_frac: float = 0.01,
                   hierarchical: bool = False,
                   guard: GuardConfig | None = None,
-                  faults=None) -> Result:
+                  faults=None, pipeline: bool = False) -> Result:
     """shard_map driver over a RoundEngine on the (pre-padded) problem.
 
     ``guard`` arms the §9 sentinel at trace-point granularity: each
@@ -109,7 +124,17 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
     carry, so it never recompiles.  ``faults`` (a ``dist.faults.FaultPlan``)
     routes every Δz merge through ``faulty_psum``'s checksummed bounded
     re-merge; fault keys are salted off the solve key so coordinate draws
-    are bit-identical with and without injection.
+    are bit-identical with and without injection.  With ``hierarchical``
+    the re-merge rides the slow inter-pod hop
+    (``dist.collectives.hierarchical_faulty_psum``).
+
+    ``pipeline`` selects the double-buffered merge schedule (module
+    docstring): the carry gains the pending wire ``w_pend``, trace points
+    report F at the stale ``z`` (one segment behind ``x_l``), and the final
+    result is fully drained.  Guarded pipelined solves drain at each trace
+    point instead, so the sentinel snapshots a consistent (x, z, F) triple
+    and a rollback leaves no update in flight — health flags reach it at
+    most one segment late.
     """
     n, d = A.shape
     axes = tuple(mesh.axis_names)
@@ -122,10 +147,6 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
         raise ValueError(
             f"number of merges {n_merges} (= rounds {rounds} / merge_rounds "
             f"{merge_rounds}) not divisible by trace_every={trace_every}")
-    if faults is not None and hierarchical:
-        raise ValueError(
-            "faults= injects at the flat psum merge; combine with "
-            "hierarchical=False (the hierarchical path has no re-merge hook)")
     if hierarchical:
         if len(axes) < 2:
             raise ValueError(
@@ -152,40 +173,87 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
             f_data = obj.masked_data_loss(z, y_rep, m_rep, engine.loss)
             return f_data + lam * jax.lax.psum(jnp.sum(jnp.abs(x_l)), axes)
 
-        def merge_fn(carry, keys_m):
-            x_l, z, ef, p_eff, m, h = carry
-            if engine.fold_always or nshards > 1:  # decorrelate shards
-                keys_m = jax.vmap(
-                    lambda kt: jax.random.fold_in(kt, me))(keys_m)
-            x_l, dz, h_e = engine.run(A_blk, y_rep, m_rep, lam, beta, z, x_l,
-                                      keys_m, p_eff)
-            if compression != "none":
-                dz, ef = _compress_dz(dz, ef, compression, topk_frac)
-            if faults is not None:
+        def merge_wire(w, m, h):
+            """One Δz merge over the §7/§9 wire: flat psum, hierarchical
+            two-level reduce, fault-injected, or both (the checksummed
+            re-merge rides the slow inter-pod hop, DESIGN §9.3)."""
+            if faults is not None and hierarchical:
+                from repro.dist.collectives import hierarchical_faulty_psum
+                w_g, h_f = hierarchical_faulty_psum(
+                    w, jax.random.fold_in(fkey, m), me, faults,
+                    axes[0], axes[1:])
+                h = jnp.maximum(h, h_f)
+            elif faults is not None:
                 from repro.dist.faults import faulty_psum
-                dz_g, h_f = faulty_psum(dz, jax.random.fold_in(fkey, m), me,
-                                        faults, axes)
+                w_g, h_f = faulty_psum(w, jax.random.fold_in(fkey, m), me,
+                                       faults, axes)
                 h = jnp.maximum(h, h_f)
             elif hierarchical:
                 from repro.dist.collectives import hierarchical_psum
-                dz_g = hierarchical_psum(dz, axes[0], axes[1:])
+                w_g = hierarchical_psum(w, axes[0], axes[1:])
             else:
-                dz_g = jax.lax.psum(dz, axes)
+                w_g = jax.lax.psum(w, axes)
+            return w_g, h
+
+        def fold_keys(keys_m):
+            if engine.fold_always or nshards > 1:  # decorrelate shards
+                keys_m = jax.vmap(
+                    lambda kt: jax.random.fold_in(kt, me))(keys_m)
+            return keys_m
+
+        def merge_fn(carry, keys_m):
+            x_l, z, ef, p_eff, m, h = carry
+            x_l, dz, h_e = engine.run(A_blk, y_rep, m_rep, lam, beta, z, x_l,
+                                      fold_keys(keys_m), p_eff)
+            if compression != "none":
+                dz, ef = _compress_dz(dz, ef, compression, topk_frac)
+            dz_g, h = merge_wire(dz, m, h)
             h = jnp.maximum(h, h_e)
             return (x_l, z + dz_g, ef, p_eff, m + 1, h), None
+
+        def merge_fn_pipe(carry, keys_m):
+            # double-buffered schedule (module docstring): the collective
+            # carries the PREVIOUS segment's wire, which this segment's
+            # engine launch does not read — no data dependence, so the two
+            # can overlap.  The prologue step merges the zero w_pend0.
+            x_l, z, w_pend, ef, p_eff, m, h = carry
+            w_g, h = merge_wire(w_pend, m, h)
+            x_l, dz, h_e = engine.run_segment(A_blk, y_rep, m_rep, lam, beta,
+                                              z, w_pend, x_l,
+                                              fold_keys(keys_m), p_eff)
+            if compression != "none":
+                # pend the receiver-side reconstruction, not the raw Δz, so
+                # the next segment's view matches what the merge will add
+                dz, ef = _compress_dz(dz, ef, compression, topk_frac)
+            h = jnp.maximum(h, h_e)
+            return (x_l, z + w_g, dz, ef, p_eff, m + 1, h), None
+
+        step_fn = merge_fn_pipe if pipeline else merge_fn
 
         def outer_fn(carry, keys_o):
             # trace_every merges without objective bookkeeping, then one
             # F(x)/nnz evaluation (2 scalar psums) — the bookkeeping psums
             # cost as much wire as the dz psum itself when traced per merge
+            inner_c, gs = (carry, None) if guard is None else carry
+            inner_c, _ = jax.lax.scan(step_fn, inner_c, keys_o)
+            if pipeline:
+                x_l, z, w_pend, ef, p_eff, m, h = inner_c
+            else:
+                (x_l, z, ef, p_eff, m, h), w_pend = inner_c, None
             if guard is None:
-                carry, _ = jax.lax.scan(merge_fn, carry, keys_o)
-                (x_l, z, ef, p_eff, m, h), gs = carry, None
+                # pipelined trace points report F at the stale z — one
+                # segment behind x_l (consistent across shards: z is
+                # replicated, w_pend is not); the final result is drained
                 f_out = objective(z, x_l)
             else:
-                (inner_c, gs) = carry
-                inner_c, _ = jax.lax.scan(merge_fn, inner_c, keys_o)
-                x_l, z, ef, _, m, h = inner_c
+                if pipeline:
+                    # the sentinel needs a consistent (x, z, F) snapshot to
+                    # roll back to: drain the in-flight wire at the trace
+                    # point (one extra merge per trace_every), so a rollback
+                    # leaves nothing pending and health flags arrive at most
+                    # one segment late
+                    w_g, h = merge_wire(w_pend, m, h)
+                    z, w_pend, m = z + w_g, jnp.zeros_like(w_pend), m + 1
                 # health flags are shard-local (non-finite local Δz, failed
                 # re-merges) — combine before the replicated trip decision
                 h_g = jax.lax.psum(h, axes)
@@ -194,13 +262,14 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
                     p_floor=p_floor, health=h_g)
                 # discarded updates invalidate their §7 error feedback too
                 ef = jnp.where(bad, jnp.zeros_like(ef), ef)
+                p_eff = gs.p_eff
             nnz = jax.lax.psum(jnp.sum(x_l != 0), axes)
             h0 = jnp.zeros((), jnp.float32)      # sentinel consumed the flag
-            if guard is None:
-                carry = (x_l, z, ef, p_eff, m, h0)
+            if pipeline:
+                inner_c = (x_l, z, w_pend, ef, p_eff, m, h0)
             else:
-                carry = ((x_l, z, ef, gs.p_eff, m, h0), gs)
-            return carry, (f_out, nnz)
+                inner_c = (x_l, z, ef, p_eff, m, h0)
+            return (inner_c if guard is None else (inner_c, gs)), (f_out, nnz)
 
         keys = jax.random.split(key_rep, rounds)
         keys = keys.reshape(n_merges // trace_every, trace_every,
@@ -208,18 +277,27 @@ def _engine_solve(A, y, mask, x0, lam, beta, key, *, engine, rounds: int,
         x0_l = x0_blk.astype(jnp.float32)
         m0 = jnp.zeros((), jnp.int32)
         h0 = jnp.zeros((), jnp.float32)
+        p0 = jnp.int32(engine.p_full)
+        if pipeline:      # prologue: nothing pending before the first merge
+            inner0 = (x0_l, z, jnp.zeros(n, jnp.float32), ef, p0, m0, h0)
+        else:
+            inner0 = (x0_l, z, ef, p0, m0, h0)
         if guard is None:
-            carry0 = (x0_l, z, ef, jnp.int32(engine.p_full), m0, h0)
-            (x_l, z, _, _, _, _), (fs, nnzs) = jax.lax.scan(
-                outer_fn, carry0, keys)
+            inner_c, (fs, nnzs) = jax.lax.scan(outer_fn, inner0, keys)
             backoffs = jnp.zeros((), jnp.int32)
         else:
             gs0 = health.init_guard_state(x0_l, z, objective(z, x0_l),
                                           engine.p_full)
-            carry0 = ((x0_l, z, ef, gs0.p_eff, m0, h0), gs0)
-            ((x_l, z, _, _, _, _), gs), (fs, nnzs) = jax.lax.scan(
-                outer_fn, carry0, keys)
+            (inner_c, gs), (fs, nnzs) = jax.lax.scan(
+                outer_fn, (inner0, gs0), keys)
             backoffs = gs.backoffs
+        x_l, z = inner_c[0], inner_c[1]
+        if pipeline and guard is None:
+            # epilogue: drain the final segment's in-flight wire (guarded
+            # pipelined solves already drained at the last trace point)
+            w_pend, m, h = inner_c[2], inner_c[5], inner_c[6]
+            w_g, _ = merge_wire(w_pend, m, h)
+            z = z + w_g
         return x_l, z, fs, nnzs, backoffs
 
     p_floor = 1 if guard is None else max(1, min(guard.p_min, engine.p_full))
@@ -262,6 +340,7 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
                           x0: jax.Array | None = None,
                           compression: str = "none", topk_frac: float = 0.01,
                           hierarchical: bool = False,
+                          pipeline: bool = False,
                           interpret: bool = True,
                           guard: GuardConfig | None = None,
                           faults=None,
@@ -281,14 +360,25 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
                 "launch" — ``rounds_per_launch`` stale rounds per merge.
     x0          optional warm start (λ-continuation); zero-padded and
                 sharded, with z initialized to the psum of A x0.
-    compression "none" | "int8" | "topk": Δz merges route through the §7
-                wire layer with error feedback.
+    compression "none" | "bf16" | "int8" | "topk": Δz merges route through
+                the §7 wire layer with error feedback.
     hierarchical  on a 2-D (outer, inner) mesh, merge Δz via
                 reduce-scatter(inner) → psum(outer) → all-gather(inner).
+    pipeline    double-buffered async merge (module docstring / DESIGN
+                §3.4): each segment's Δz psum is issued one segment late
+                with no data dependence on the current segment's compute,
+                so the wire overlaps the engine launch; other shards'
+                updates land one extra segment stale, a final drain keeps
+                the returned (x, z) exact, and trace points report F at the
+                stale margin.  Composes with compression, hierarchical,
+                faults, and guard (guarded solves drain at trace points so
+                the sentinel snapshot stays consistent).
     guard       §9 sentinel + adaptive-P backoff (``health.GuardConfig``);
                 ``guard.p_min`` is in the engine's parallelism units.
     faults      §9.3 Δz fault injection (``dist.faults.FaultPlan``): every
-                merge runs through the checksummed re-merging psum.
+                merge runs through the checksummed re-merging psum — on a
+                2-D hierarchical mesh, through
+                ``hierarchical_faulty_psum``'s inter-pod re-merge.
     ckpt_every  > 0 segments the solve at merge granularity (must be a
                 multiple of ``trace_every`` dividing the merge count): keys
                 are folded per segment, z is rebuilt from x at each segment
@@ -360,7 +450,7 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
     kw = dict(engine=eng, merge_rounds=merge_rounds, mesh=mesh,
               trace_every=trace_every, compression=compression,
               topk_frac=topk_frac, hierarchical=hierarchical,
-              guard=guard, faults=faults)
+              guard=guard, faults=faults, pipeline=pipeline)
 
     if ckpt_every <= 0:
         if fail_at_merge is not None or resume or ckpt_dir is not None:

@@ -145,6 +145,15 @@ class BlockedCSC:
         return dataclasses.replace(
             self, vals=self.vals / s.reshape(self.nblk, 1, self.block))
 
+    def astype(self, dtype) -> "BlockedCSC":
+        """Cast the nnz *value* tiles (rows stay int32).  ``bfloat16`` halves
+        both the at-rest footprint and the per-tile HBM bytes of every sparse
+        kernel — all of which accumulate in f32 regardless of the stored
+        dtype (DESIGN §8.3).  Cast AFTER ``normalize_columns``/``make_problem``
+        so column norms are computed at full precision; padding zeros are
+        exact in every float dtype, so tiles stay additive identities."""
+        return dataclasses.replace(self, vals=self.vals.astype(dtype))
+
     def gather_cols(self, idx) -> "SparseCols":
         """nnz tiles of columns ``idx`` (P,): rows/vals (P, tile)."""
         b, c = idx // self.block, idx % self.block

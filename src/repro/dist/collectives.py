@@ -23,3 +23,26 @@ def hierarchical_psum(x: jax.Array, outer_axis: str, inner_axes=()):
     for ax in reversed(tuple(inner_axes)):
         x = jax.lax.all_gather(x, ax, axis=0, tiled=True)
     return x
+
+
+def hierarchical_faulty_psum(x: jax.Array, key: jax.Array, me: jax.Array,
+                             plan, outer_axis: str, inner_axes=()):
+    """``hierarchical_psum`` with the slow inter-pod hop routed through
+    ``dist.faults.faulty_psum`` (DESIGN §9.3) — the outer psum is the link
+    that real fleets drop/corrupt, so that is where injection and the
+    checksummed bounded re-merge happen, on the 1/inner reduce-scattered
+    shard.  The fast intra-pod reduce-scatter/all-gather are assumed
+    reliable (same assumption as the checksum channel itself).
+
+    Returns ``(x_global, health)``; health is per-device (each inner
+    position re-merges its own slice) — combine with a psum over all axes
+    before any replicated decision, exactly as the driver already does for
+    the flat ``faulty_psum``.
+    """
+    from repro.dist.faults import faulty_psum
+    for ax in inner_axes:
+        x = jax.lax.psum_scatter(x, ax, scatter_dimension=0, tiled=True)
+    x, health = faulty_psum(x, key, me, plan, (outer_axis,))
+    for ax in reversed(tuple(inner_axes)):
+        x = jax.lax.all_gather(x, ax, axis=0, tiled=True)
+    return x, health

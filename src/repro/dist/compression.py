@@ -3,6 +3,9 @@
 Schemes
 -------
 ``none``   identity (f32 on the wire).
+``bf16``   round-to-nearest bfloat16; 2 B/element — half the wire with the
+           full f32 exponent range, so there is no scale scalar to ship and
+           nothing to clip (the cheapest scheme to en/decode: a dtype cast).
 ``int8``   per-leaf symmetric int8: q = round(x / s), s = max|x| / 127.
            Optional stochastic rounding (pass ``key``) makes the quantizer
            unbiased: E[dequant(q)] = x.
@@ -74,6 +77,8 @@ def _compress_leaf(g, scheme: str, topk_frac: float, key):
     reconstructs); the caller derives the EF residual from it."""
     if scheme == "none":
         return g
+    if scheme == "bf16":
+        return g.astype(jnp.bfloat16).astype(jnp.float32)
     if scheme == "int8":
         return dequantize_int8(quantize_int8(g, key=key)).reshape(g.shape)
     if scheme == "topk":
@@ -105,6 +110,8 @@ def wire_bytes(grads, scheme: str = "none", topk_frac: float = 0.01) -> int:
     leaves = jax.tree_util.tree_flatten(grads)[0]
     if scheme == "none":
         return sum(4 * l.size for l in leaves)
+    if scheme == "bf16":
+        return sum(2 * l.size for l in leaves)        # no scale scalar
     if scheme == "int8":
         return sum(l.size + 4 for l in leaves)        # payload + f32 scale
     if scheme == "topk":

@@ -33,7 +33,9 @@ data path with the §4.2 VMEM-residency dataflow:
   accumulates its contributions into a Δz output for the caller's psum.
 
 Padded tile slots hold (row 0, value 0) so they are additive no-ops in both
-directions.  Like the dense kernels these run under ``interpret=True`` on
+directions.  Value tiles may be stored bf16 (``BlockedCSC.astype``) to halve
+their HBM/wire bytes — every kernel here casts the fetched tile to f32
+before accumulating, exactly like the dense fused kernel's bf16 A storage.  Like the dense kernels these run under ``interpret=True`` on
 this CPU container; the gather/scatter lower to XLA there and to Mosaic's
 dynamic gather / scatter-accumulate on TPU.  The layout is chosen for the
 TPU path: tiles are rectangular (tile × 128), lane-aligned, and selected by
@@ -414,19 +416,24 @@ def fused_sparse_shotgun_delta_rounds(rows, vals, z, x, blk_idx, lam, beta,
 
 
 def fused_sparse_vmem_bytes(n: int, nblk: int, tile: int, K: int,
-                            block: int = BLOCK, emit_dz: bool = False) -> int:
+                            block: int = BLOCK, emit_dz: bool = False,
+                            val_bytes: int = 4) -> int:
     """f32/int32 VMEM resident set of the fused sparse kernel (DESIGN §8.3):
     z/r scratch (+ Δz for the engine variant), the z0/y in- and z out-
     vectors, the three full-width x buffers (x0/scratch/out), the K-row
     delta scratch, and the double-buffered (tile, block) rows+vals tile
-    pair.  R never enters — only the (R·K) scalar-prefetch index matrix and
-    the per-round (1, 1) trace outputs scale with R, both negligible — so
-    the tile size (and through it the density) is what bounds the shapes
-    this kernel accepts, not the rounds-per-launch."""
+    pair.  ``val_bytes`` is the stored dtype of the vals tiles (4 = f32,
+    2 = bf16 via ``BlockedCSC.astype`` — rows stay int32 and all in-kernel
+    accumulation stays f32, so only the vals term shrinks).  R never
+    enters — only the (R·K) scalar-prefetch index matrix and the per-round
+    (1, 1) trace outputs scale with R, both negligible — so the tile size
+    (and through it the density) is what bounds the shapes this kernel
+    accepts, not the rounds-per-launch."""
     # z0-in, y-in, z_s, r_s, plus z-out (margin-owning) or dz_s + dz-out
     # minus z-out (engine variant): 5 vs 6 n-vectors
     vecs = (6 if emit_dz else 5) * n * 4
     xbuf = 3 * nblk * block * 4                    # x0, x_s, x out
     dbuf = K * block * 4                           # delta scratch
-    tiles = 2 * 2 * tile * block * 4               # rows+vals, double-buffered
+    # rows (int32) + vals (val_bytes), each double-buffered
+    tiles = 2 * tile * block * (4 + val_bytes)
     return vecs + xbuf + dbuf + tiles

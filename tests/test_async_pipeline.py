@@ -1,0 +1,246 @@
+"""Double-buffered async Δz merge pipeline (DESIGN §3.4).
+
+In-process (1-device mesh): pipelined and synchronous solves must agree
+EXACTLY on one shard — the pipelined view z + w_pend equals the fully
+merged margin when there is nobody else to be stale against — and the
+epilogue drain must leave the returned (x, z) consistent.
+
+In a subprocess with 16 forced host devices: the pipelined trajectory on a
+real 8-shard mesh must match a host-level staleness-1 reference simulator
+(driving ``engine.run`` directly, one extra segment of staleness for other
+shards' wires) to 1e-5 relative objective; pipeline composes with the
+hierarchical two-level merge on a 4×4 mesh, with fault-injected merges
+riding the inter-pod hop, with bf16 wire compression (≤1 % objective
+parity), and with the §9 sentinel (no false rollbacks on a healthy run).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as obj
+from repro.core.sharded import make_feature_mesh, shotgun_sharded_solve
+from repro.data import synthetic as syn
+from repro.data.sparse import BlockedCSC
+
+
+def _mesh1():
+    return make_feature_mesh(jax.devices()[:1])
+
+
+@pytest.fixture(scope="module")
+def prob():
+    A, y, _ = syn.sparco(seed=6, n=640, d=1024)
+    return obj.make_problem(A, y, lam=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Single-shard: pipelined == synchronous exactly (no one to be stale against)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,kw", [
+    ("scalar", {"P_local": 4}),
+    ("fused", {"K": 2}),
+])
+def test_pipeline_single_shard_matches_sync(prob, engine, kw):
+    key = jax.random.PRNGKey(0)
+    common = dict(rounds=16, mesh=_mesh1(), engine=engine, merge="launch",
+                  rounds_per_launch=4, trace_every=2, **kw)
+    sync = shotgun_sharded_solve(prob, key, **common)
+    pipe = shotgun_sharded_solve(prob, key, pipeline=True, **common)
+    # identical draws, identical views -> identical update sequence
+    np.testing.assert_array_equal(np.asarray(sync.x), np.asarray(pipe.x))
+    # the epilogue drain makes the returned margin exact
+    np.testing.assert_allclose(np.asarray(pipe.z), np.asarray(sync.z),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_single_shard_sparse_fused():
+    A, y, _ = syn.sparse_imaging(seed=3, n=512, d=512, density=0.01)
+    prob = obj.make_problem(BlockedCSC.from_dense(A), y, lam=0.5)
+    key = jax.random.PRNGKey(0)
+    common = dict(rounds=16, mesh=_mesh1(), engine="sparse_fused", K=1,
+                  merge="launch", rounds_per_launch=4, trace_every=2)
+    sync = shotgun_sharded_solve(prob, key, **common)
+    pipe = shotgun_sharded_solve(prob, key, pipeline=True, **common)
+    np.testing.assert_array_equal(np.asarray(sync.x), np.asarray(pipe.x))
+    np.testing.assert_allclose(np.asarray(pipe.z), np.asarray(sync.z),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_trace_is_one_segment_stale_single_shard():
+    """Trace points report the data loss at the carry margin — one merge
+    window behind x_l.  With lam=0 (objective = data loss only) the 1-shard
+    pipelined trace must therefore equal the synchronous trace shifted by
+    exactly one point (identical trajectory, stale bookkeeping)."""
+    A, y, _ = syn.sparco(seed=6, n=640, d=1024)
+    prob = obj.make_problem(A, y, lam=0.0)
+    key = jax.random.PRNGKey(0)
+    common = dict(rounds=16, mesh=_mesh1(), P_local=4, merge="launch",
+                  rounds_per_launch=4, trace_every=1)
+    sync = shotgun_sharded_solve(prob, key, **common)
+    pipe = shotgun_sharded_solve(prob, key, pipeline=True, **common)
+    f_sync = np.asarray(sync.trace.objective)
+    f_pipe = np.asarray(pipe.trace.objective)
+    np.testing.assert_allclose(f_pipe[1:], f_sync[:-1], rtol=1e-5)
+
+
+def test_bf16_compression_scheme_accepted(prob):
+    """bf16 rides the §7 wire layer: accepted by the driver, converges on
+    one shard (where compression only perturbs the shard's own merge)."""
+    r = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), rounds=16,
+                              mesh=_mesh1(), P_local=4, compression="bf16",
+                              trace_every=4)
+    f = np.asarray(r.trace.objective)
+    assert np.all(np.isfinite(f)) and f[-1] < f[0]
+
+
+# ---------------------------------------------------------------------------
+# Multi-device behavior (16 forced host devices, own process)
+# ---------------------------------------------------------------------------
+
+SUB = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import objectives as obj
+from repro.core.engines import make_engine
+from repro.core.sharded import (make_feature_mesh, pad_features,
+                                shotgun_sharded_solve)
+from repro.data import synthetic as syn
+
+A, y, _ = syn.sparse_imaging(seed=0, n=512, d=1024, density=0.005)
+prob = obj.make_problem(A, y, lam=0.5)
+mesh8 = make_feature_mesh(jax.devices()[:8])
+SH, P_LOCAL, R, ROUNDS, TRACE = 8, 4, 4, 64, 4
+
+# --- host-level staleness-1 reference: drive engine.run directly ----------
+# Replicates the pipelined schedule without shard_map: each merge window m
+# runs every shard against view = z + w_pend[s] (own pending wire visible,
+# others' one segment stale), then folds ALL pending wires into z exactly
+# once.  Key handling mirrors the driver: split(key, rounds) reshaped per
+# merge window, each window's keys folded with the shard index.
+key = jax.random.PRNGKey(7)
+eng = make_engine("scalar", loss=prob.loss, P_local=P_LOCAL)
+Ap = pad_features(prob.A, SH)
+d_loc = Ap.shape[1] // SH
+mask = jnp.ones(prob.n, jnp.float32)
+n_merges = ROUNDS // R
+keys = jax.random.split(key, ROUNDS).reshape(n_merges, R, -1)
+p_eff = jnp.int32(eng.p_full)
+x_l = [jnp.zeros(d_loc, jnp.float32) for _ in range(SH)]
+w_pend = [jnp.zeros(prob.n, jnp.float32) for _ in range(SH)]
+z = jnp.zeros(prob.n, jnp.float32)
+fs_ref = []
+run = jax.jit(lambda A_s, zv, xs, ks: eng.run(
+    A_s, prob.y, mask, prob.lam, prob.beta, zv, xs, ks, p_eff))
+for m in range(n_merges):
+    dz_new = []
+    for s in range(SH):
+        ks = jax.vmap(lambda kt: jax.random.fold_in(kt, s))(keys[m])
+        A_s = Ap[:, s * d_loc:(s + 1) * d_loc]
+        x_l[s], dz, _ = run(A_s, z + w_pend[s], x_l[s], ks)
+        dz_new.append(dz)
+    z = z + sum(w_pend)                  # catch-up: previous wires, once
+    w_pend = dz_new
+    if (m + 1) % TRACE == 0:
+        x_all = jnp.concatenate(x_l)
+        f = obj.masked_data_loss(z, prob.y, mask, prob.loss) \
+            + prob.lam * jnp.sum(jnp.abs(x_all))
+        fs_ref.append(float(f))
+z = z + sum(w_pend)                      # epilogue drain
+x_ref = jnp.concatenate(x_l)
+
+r = shotgun_sharded_solve(prob, key, P_local=P_LOCAL, rounds=ROUNDS,
+                          mesh=mesh8, merge="launch", rounds_per_launch=R,
+                          trace_every=TRACE, pipeline=True)
+np.testing.assert_allclose(np.asarray(r.trace.objective),
+                           np.asarray(fs_ref, np.float32), rtol=1e-5)
+np.testing.assert_allclose(np.asarray(r.x), np.asarray(x_ref)[:prob.d],
+                           rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(np.asarray(r.z), np.asarray(z), rtol=1e-4,
+                           atol=1e-5)
+print("STALENESS1_PARITY_OK")
+
+# --- pipelined still converges near the synchronous trajectory ------------
+sync = shotgun_sharded_solve(prob, key, P_local=P_LOCAL, rounds=256,
+                             mesh=mesh8, merge="launch", rounds_per_launch=R,
+                             trace_every=16)
+pipe = shotgun_sharded_solve(prob, key, P_local=P_LOCAL, rounds=256,
+                             mesh=mesh8, merge="launch", rounds_per_launch=R,
+                             trace_every=16, pipeline=True)
+f_s, f_p = float(sync.trace.objective[-1]), float(pipe.trace.objective[-1])
+assert abs(f_p - f_s) / f_s < 0.10, (f_p, f_s)
+print("PIPELINE_CONVERGES_OK")
+
+# --- pipeline x hierarchical on a 4x4 mesh: merge algebra is a drop-in ----
+mesh44 = Mesh(np.array(jax.devices()).reshape(4, 4), ("pod", "f"))
+flat = shotgun_sharded_solve(prob, key, P_local=2, rounds=64, mesh=mesh44,
+                             merge="launch", rounds_per_launch=R,
+                             trace_every=4, pipeline=True)
+hier = shotgun_sharded_solve(prob, key, P_local=2, rounds=64, mesh=mesh44,
+                             merge="launch", rounds_per_launch=R,
+                             trace_every=4, pipeline=True, hierarchical=True)
+np.testing.assert_allclose(np.asarray(flat.trace.objective),
+                           np.asarray(hier.trace.objective), rtol=1e-5)
+print("PIPELINE_HIERARCHICAL_OK")
+
+# --- faults x hierarchical: checksummed re-merge on the inter-pod hop -----
+# corrupt-only plan: the 1e3-offset garbage always fails the sum check (a
+# dropped shard whose Δz sums below the checksum tolerance can slip
+# through by design), so every fault is detected and recovery is exact
+from repro.dist.faults import FaultPlan
+plan = FaultPlan(corrupt_prob=0.1, max_retries=6)
+for pipeline in (False, True):
+    fa = shotgun_sharded_solve(prob, key, P_local=2, rounds=64, mesh=mesh44,
+                               merge="launch", rounds_per_launch=R,
+                               trace_every=4, pipeline=pipeline,
+                               hierarchical=True, faults=plan)
+    base = hier if pipeline else shotgun_sharded_solve(
+        prob, key, P_local=2, rounds=64, mesh=mesh44, merge="launch",
+        rounds_per_launch=R, trace_every=4, hierarchical=True)
+    # every injected fault recovered within the retry budget -> exact merge
+    np.testing.assert_allclose(np.asarray(fa.trace.objective),
+                               np.asarray(base.trace.objective), rtol=1e-5)
+print("FAULTS_HIERARCHICAL_OK")
+
+# --- bf16 wire: <= 1% objective parity vs the f32 merge -------------------
+for pipeline in (False, True):
+    f32 = shotgun_sharded_solve(prob, key, P_local=P_LOCAL, rounds=64,
+                                mesh=mesh8, merge="launch",
+                                rounds_per_launch=R, trace_every=4,
+                                pipeline=pipeline)
+    b16 = shotgun_sharded_solve(prob, key, P_local=P_LOCAL, rounds=64,
+                                mesh=mesh8, merge="launch",
+                                rounds_per_launch=R, trace_every=4,
+                                pipeline=pipeline, compression="bf16")
+    f0, f1 = float(f32.trace.objective[-1]), float(b16.trace.objective[-1])
+    assert abs(f1 - f0) / f0 < 0.01, (pipeline, f1, f0)
+print("BF16_WIRE_OK")
+
+# --- guarded pipelined run: health lands a segment late, no false trips ---
+from repro.core.health import GuardConfig, STATUS_OK
+g = shotgun_sharded_solve(prob, key, P_local=P_LOCAL, rounds=64, mesh=mesh8,
+                          merge="launch", rounds_per_launch=R, trace_every=4,
+                          pipeline=True, guard=GuardConfig(factor=10.0))
+f = np.asarray(g.trace.objective)
+assert int(g.status) == STATUS_OK, int(g.status)
+assert np.all(np.isfinite(f)) and f[-1] < f[0]
+print("GUARDED_PIPELINE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_async_pipeline():
+    out = subprocess.run([sys.executable, "-c", SUB], capture_output=True,
+                         text=True, timeout=900,
+                         env={**os.environ, "PYTHONPATH": "src"})
+    for tag in ["STALENESS1_PARITY_OK", "PIPELINE_CONVERGES_OK",
+                "PIPELINE_HIERARCHICAL_OK", "FAULTS_HIERARCHICAL_OK",
+                "BF16_WIRE_OK", "GUARDED_PIPELINE_OK"]:
+        assert tag in out.stdout, out.stdout + out.stderr

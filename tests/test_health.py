@@ -178,8 +178,11 @@ def test_inject_dz_modes():
     np.testing.assert_array_equal(np.asarray(clean), np.asarray(dz))
 
 
-def test_faults_reject_hierarchical(mesh_prob):
-    with pytest.raises(ValueError, match="hierarchical"):
+def test_faults_with_hierarchical_still_needs_2d_mesh(mesh_prob):
+    """faults= composes with hierarchical= (the re-merge rides the
+    inter-pod hop, exercised on a real 4x4 mesh in test_async_pipeline),
+    but the mesh-shape validation still applies."""
+    with pytest.raises(ValueError, match="2-D"):
         shotgun_sharded_solve(mesh_prob, jax.random.PRNGKey(0), P_local=2,
                               rounds=8, faults=FaultPlan(drop_prob=0.1),
                               hierarchical=True)

@@ -67,3 +67,86 @@ def test_serve_slot_reuse_isolated():
     v = ARCHS["qwen3-4b"].smoke_config().vocab_size
     for r in reqs:
         assert all(0 <= t < max(v, 512) for t in r.out)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot round-deadline eviction (straggler mitigation, DESIGN §9.5)
+# ---------------------------------------------------------------------------
+
+def test_serve_eviction_requeue_preserves_output():
+    """With a tight deadline, long requests are evicted, re-queued, and
+    re-prefill their partial generation into the next free slot — greedy
+    decode is deterministic, so the final token streams must match a run
+    with no deadline at all."""
+    kw = dict(requests=4, batch=2, max_new=8, prompt_len=4, max_len=64,
+              quiet=True, seed=1)
+    ref = {r.rid: r.out for r in serve("qwen3-4b", **kw)}
+    evicted = serve("qwen3-4b", max_rounds=3, max_evictions=10, **kw)
+    assert sorted(r.rid for r in evicted) == list(range(4))
+    assert any(r.evictions > 0 for r in evicted)   # the deadline actually hit
+    for r in evicted:
+        assert r.out == ref[r.rid], (r.rid, r.evictions)
+
+
+def test_serve_eviction_gives_up_after_max_evictions():
+    """max_rounds=1 evicts every unfinished slot each step; with
+    max_evictions=1 a long request is re-queued once, then marked done with
+    its partial output (never more than max_evictions+1 windows)."""
+    reqs = serve("qwen3-4b", requests=3, batch=3, max_new=12, prompt_len=4,
+                 max_len=64, quiet=True, seed=2, max_rounds=1,
+                 max_evictions=1)
+    assert sorted(r.rid for r in reqs) == list(range(3))
+    for r in reqs:
+        assert r.done
+        assert r.evictions <= 2                # gave up at the second strike
+        if r.evictions == 2:
+            # partial output: one token per admission prefill + one decode
+            # step per survived window
+            assert 0 < len(r.out) < 12
+
+
+def test_engine_age_tracking_and_admit_reset():
+    """Slot age counts decode steps since admission and resets on refill —
+    the deadline clock must not inherit the previous occupant's age."""
+    from repro.configs import ARCHS
+    from repro.launch.serve import Engine, Request
+    cfg = ARCHS["qwen3-4b"].smoke_config()
+    eng = Engine(cfg, batch=2, max_len=32)
+    rng = np.random.default_rng(0)
+    r0 = Request(0, rng.integers(1, cfg.vocab_size, 4, dtype=np.int32), 16)
+    eng.admit(r0, 0)
+    assert eng.age[0] == 0
+    for expect in (1, 2, 3):
+        eng.step()
+        assert eng.age[0] == expect
+    assert eng.age[1] == 0                     # empty slot never ages
+    r1 = Request(1, rng.integers(1, cfg.vocab_size, 4, dtype=np.int32), 16)
+    eng.admit(r1, 0)                           # refill the aged slot
+    assert eng.age[0] == 0
+
+
+def test_engine_refill_no_warm_state_leak():
+    """A request admitted into a heavily used slot must generate exactly
+    what it generates in a fresh engine: the per-slot prefill + position
+    reset fully isolates it from the previous occupant's KV."""
+    from repro.configs import ARCHS
+    from repro.launch.serve import Engine, Request
+    cfg = ARCHS["qwen3-4b"].smoke_config()
+    rng = np.random.default_rng(4)
+    prompt_a = rng.integers(1, cfg.vocab_size, 12, dtype=np.int32)
+    prompt_b = rng.integers(1, cfg.vocab_size, 4, dtype=np.int32)
+
+    def run_b(engine):
+        rb = Request(9, prompt_b.copy(), 6)
+        engine.admit(rb, 0)
+        while not rb.done:
+            engine.step()
+        return rb.out
+
+    warm = Engine(cfg, batch=2, max_len=32, seed=0)
+    ra = Request(0, prompt_a, 8)
+    warm.admit(ra, 0)                          # occupy + age slot 0
+    for _ in range(4):
+        warm.step()
+    fresh = Engine(cfg, batch=2, max_len=32, seed=0)
+    assert run_b(warm) == run_b(fresh)

@@ -47,6 +47,45 @@ def test_bcsc_rejects_undersized_tile():
         BlockedCSC.from_dense(Ad, tile=1)
 
 
+def test_bcsc_astype_bf16():
+    """bf16 value tiles: rows stay int32, padding stays an exact additive
+    identity, nnz is preserved, and the linear ops (which accumulate in
+    f32) agree with the f32 container to bf16 precision."""
+    Ad, S, _ = _pair()
+    Sb = S.astype(jnp.bfloat16)
+    assert Sb.dtype == jnp.bfloat16
+    assert Sb.rows.dtype == jnp.int32
+    assert int(Sb.nnz) == int(S.nnz)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(S.d), jnp.float32)
+    r = jnp.asarray(rng.standard_normal(S.n), jnp.float32)
+    mv = obj.matvec(Sb, x)
+    rv = obj.rmatvec(Sb, r)
+    assert mv.dtype == jnp.float32 and rv.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(obj.matvec(S, x)),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(obj.rmatvec(S, r)),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sparse_fused_solver_bf16_vals_parity():
+    """Halved nnz-tile storage must not move the optimum: a sparse_fused
+    solve on bf16 value tiles (cast AFTER column normalization) tracks the
+    f32 solve's final objective to <= 1%."""
+    from repro.core.sharded import make_feature_mesh, shotgun_sharded_solve
+    _, S, y = _pair(n=512, d=512, density=0.01)
+    prob = obj.make_problem(S, y, lam=0.5)
+    prob16 = prob._replace(A=prob.A.astype(jnp.bfloat16))
+    mesh = make_feature_mesh(jax.devices()[:1])
+    kw = dict(rounds=64, mesh=mesh, engine="sparse_fused", K=1,
+              merge="launch", rounds_per_launch=8, trace_every=8)
+    f32 = shotgun_sharded_solve(prob, jax.random.PRNGKey(0), **kw)
+    b16 = shotgun_sharded_solve(prob16, jax.random.PRNGKey(0), **kw)
+    f0 = float(f32.trace.objective[-1])
+    f1 = float(b16.trace.objective[-1])
+    assert abs(f1 - f0) / f0 < 0.01, (f1, f0)
+
+
 def test_bcsc_linear_ops_match_dense():
     Ad, S, _ = _pair()
     rng = np.random.default_rng(1)
@@ -386,6 +425,10 @@ def test_fused_sparse_vmem_budget_tracks_scratch_list():
     assert fused_sparse_vmem_bytes(n, nblk, tile, K) == expect
     assert (fused_sparse_vmem_bytes(n, nblk, tile, K, emit_dz=True)
             == expect + n * 4)
+    # bf16 value tiles shrink only the streamed rows+vals pair: 4+2 B/slot
+    expect16 = (5 * n * 4 + 3 * nblk * block * 4 + K * block * 4
+                + 2 * tile * block * 6)
+    assert fused_sparse_vmem_bytes(n, nblk, tile, K, val_bytes=2) == expect16
 
 
 SUB_FUSED = r"""
