@@ -26,7 +26,9 @@ from repro.core import objectives as obj
 from repro.core.shotgun import shotgun_solve
 from repro.data import synthetic as syn
 from repro.kernels import ops
-from repro.kernels.shotgun_block import fused_shotgun_rounds
+from repro.kernels.shotgun_block import (VMEM_BUDGET, auto_tile_n,
+                                         fused_shotgun_rounds,
+                                         fused_vmem_bytes)
 
 ROUNDS_PER_LAUNCH = 8
 K = 4
@@ -47,6 +49,18 @@ def run() -> list[dict]:
         R = ROUNDS_PER_LAUNCH
         idx = (jnp.arange(R * K, dtype=jnp.int32).reshape(R, K)
                % (Ap.shape[1] // ops.BLOCK))
+
+        # refuse configs the fused kernel could not compile on hardware —
+        # interpret mode would happily "run" them and OOM much later
+        # (shotgun-lint SL101 checks the same bound on the committed rows)
+        np_, dp_ = Ap.shape
+        vmem = fused_vmem_bytes(np_, dp_, K, tile_n=auto_tile_n(
+            np_, ops.BLOCK, d=dp_))
+        if vmem > VMEM_BUDGET:
+            raise ValueError(
+                f"fused config (n={np_}, d={dp_}, K={K}, R={R}) needs "
+                f"{vmem} B of VMEM > {VMEM_BUDGET} B budget — shrink the "
+                "bench shape or K")
 
         us_two = time_us(lambda: ops.block_shotgun_round(
             Ap, z, x, blk, prob.lam, prob.beta, yp, mask, interpret=True), reps=5)

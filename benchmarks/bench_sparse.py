@@ -40,8 +40,9 @@ from repro.core import objectives as obj
 from repro.core.shotgun import shotgun_solve
 from repro.data import synthetic as syn
 from repro.kernels import ops
-from repro.kernels.shotgun_block import fused_shotgun_rounds
-from repro.kernels.shotgun_sparse import fused_sparse_shotgun_rounds
+from repro.kernels.shotgun_block import VMEM_BUDGET, fused_shotgun_rounds
+from repro.kernels.shotgun_sparse import (fused_sparse_shotgun_rounds,
+                                          fused_sparse_vmem_bytes)
 
 K = 4
 R = 8    # fused rounds per launch
@@ -65,6 +66,16 @@ def run() -> list[dict]:
         zs = jnp.zeros(n)
         blk = jnp.arange(K, dtype=jnp.int32)
         idx_rk = (jnp.arange(R * K, dtype=jnp.int32) % nblk).reshape(R, K)
+
+        # refuse configs the fused sparse kernel could not compile on
+        # hardware — interpret mode hides an oversized resident set
+        # (shotgun-lint SL101 checks the same bound on the committed rows)
+        vmem = fused_sparse_vmem_bytes(n, nblk, int(ps.A.tile), K)
+        if vmem > VMEM_BUDGET:
+            raise ValueError(
+                f"fused sparse config (n={n}, d={d}, K={K}, R={R}, "
+                f"tile={int(ps.A.tile)}) needs {vmem} B of VMEM > "
+                f"{VMEM_BUDGET} B budget — shrink the tile or K")
 
         # two-kernel sparse round vs R fused sparse rounds in one launch
         us_blk_sparse = time_us(lambda: ops.sparse_block_shotgun_round(

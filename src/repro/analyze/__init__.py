@@ -1,0 +1,16 @@
+"""shotgun-lint: static analysis for the repo's own invariants (DESIGN §10).
+
+Two levels of pluggable checkers over one findings schema:
+
+  AST   (no execution)   SL001 trace purity, SL002 dtype accumulation,
+                         SL003 bare shape assert
+  trace (jax on CPU)     SL101 VMEM budget, SL102 retrace leak,
+                         SL103 spec consistency
+
+``tools/shotgun_lint.py`` is the CLI; ``runner.run_checkers`` is the
+library entry point; ``allowlist.toml`` holds vetted exceptions.
+"""
+from repro.analyze.findings import (Finding, render_report,  # noqa: F401
+                                    sort_findings)
+from repro.analyze.runner import (ALL_RULES, LintReport,  # noqa: F401
+                                  run_checkers)

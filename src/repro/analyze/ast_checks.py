@@ -1,0 +1,295 @@
+"""AST-level shotgun-lint rules (DESIGN §10) — stdlib ``ast`` only, no
+imports of the checked code, so these run anywhere in milliseconds.
+
+  SL001  trace purity      host-side effects (``np.random``, ``time.*``,
+                           ``print``, global/nonlocal mutation) inside traced
+                           contexts: jit-decorated functions, ``lax.scan`` /
+                           ``fori_loop`` / ``while_loop`` bodies, and Pallas
+                           kernel bodies.  These bake one host value into the
+                           jaxpr (or silently vanish after the first trace).
+  SL002  dtype accumulation  matmuls that can accumulate in bf16: any
+                           ``lax.dot_general`` without
+                           ``preferred_element_type``, and — in ``kernels/``
+                           and ``dist/``, where bf16 operands are a supported
+                           storage format — ``@`` / ``jnp.dot`` /
+                           ``jnp.matmul`` / ``jnp.einsum`` with no operand
+                           cast to f32 at the use site, plus bf16 VMEM
+                           scratch accumulators.  The paper's Thm 3.2 /
+                           Lemma 3.3 error budget assumes f32 accumulation.
+  SL003  bare shape assert   ``assert`` on shape arithmetic in ``src/repro``
+                           — the PR 2/3 convention is ``ValueError`` carrying
+                           the offending values (asserts vanish under
+                           ``python -O`` and lose the operands).
+
+Traced-context detection is deliberately syntactic and conservative-in,
+liberal-out: a function counts as traced when it is (a) decorated with
+``jax.jit`` (bare or via ``functools.partial``), (b) named ``kernel`` /
+``*_kernel``, or (c) passed by name or lambda to ``lax.scan`` /
+``fori_loop`` / ``while_loop`` / ``pl.pallas_call`` / call-form
+``jax.jit(f)``.  Everything lexically inside a traced function (including
+nested defs — ``pl.when`` bodies etc.) inherits the context.  Vetted
+exceptions go in ``allowlist.toml``.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterable
+
+from repro.analyze.findings import Finding
+
+# Dirs (relative to the scan root) where bf16 operands are a supported
+# storage format, so the operator-form matmul rules apply.
+DTYPE_STRICT_DIRS = ("kernels", "dist")
+
+IMPURE_CALL_PREFIXES = ("np.random.", "numpy.random.", "time.",
+                        "random.", "datetime.")
+
+_MATMUL_CALLS = {"jnp.dot", "jnp.matmul", "jnp.einsum", "jnp.vdot",
+                 "jax.numpy.dot", "jax.numpy.matmul", "jax.numpy.einsum"}
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'jax.lax.scan' for Name/Attribute chains; '' for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def iter_py_files(root: pathlib.Path) -> list[pathlib.Path]:
+    """Deterministic scan set: ``<root>/src/repro`` when it exists (the
+    repo layout), else every .py under root (fixture trees)."""
+    base = root / "src" / "repro"
+    scan = base if base.is_dir() else root
+    return sorted(p for p in scan.rglob("*.py"))
+
+
+class ParsedModule:
+    """One parsed file plus the parent map and traced-context node set."""
+
+    def __init__(self, path: pathlib.Path, root: pathlib.Path):
+        self.path = path
+        try:
+            self.rel = path.relative_to(root).as_posix()
+        except ValueError:
+            self.rel = path.as_posix()
+        self.tree = ast.parse(path.read_text(), filename=str(path))
+        self.parents: dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.traced = _collect_traced(self.tree)
+
+    def in_traced_context(self, node: ast.AST) -> bool:
+        while node is not None:
+            if node in self.traced:
+                return True
+            node = self.parents.get(node)
+        return False
+
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    name = dotted_name(dec)
+    if name in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        cname = dotted_name(dec.func)
+        if cname in ("jax.jit", "jit"):
+            return True
+        if cname in ("functools.partial", "partial"):
+            return any(dotted_name(a) in ("jax.jit", "jit") for a in dec.args)
+    return False
+
+
+def _collect_traced(tree: ast.AST) -> set:
+    """Function/lambda nodes whose bodies execute under a jax trace."""
+    by_name: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+
+    traced: set = set()
+
+    def mark(arg: ast.AST | None):
+        if arg is None:
+            return
+        if isinstance(arg, ast.Lambda):
+            traced.add(arg)
+        else:
+            for fn in by_name.get(dotted_name(arg), []):
+                traced.add(fn)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if (node.name == "kernel" or node.name.endswith("_kernel")
+                    or any(_is_jit_decorator(d) for d in node.decorator_list)):
+                traced.add(node)
+        elif isinstance(node, ast.Call):
+            cname = dotted_name(node.func)
+            tail = cname.rsplit(".", 1)[-1]
+            args = node.args
+            if tail == "scan" and cname.endswith("lax.scan"):
+                mark(args[0] if args else None)
+            elif tail == "fori_loop":
+                mark(args[2] if len(args) > 2 else None)
+            elif tail == "while_loop":
+                mark(args[0] if args else None)
+                mark(args[1] if len(args) > 1 else None)
+            elif tail == "pallas_call":
+                mark(args[0] if args else None)
+            elif cname in ("jax.jit", "jit"):
+                mark(args[0] if args else None)
+    return traced
+
+
+# ---------------------------------------------------------------------------
+# SL001 — trace purity
+# ---------------------------------------------------------------------------
+
+def check_trace_purity(mod: ParsedModule) -> Iterable[Finding]:
+    for node in ast.walk(mod.tree):
+        if not mod.in_traced_context(node):
+            continue
+        if isinstance(node, ast.Call):
+            cname = dotted_name(node.func)
+            if cname == "print":
+                yield Finding(mod.rel, node.lineno, "SL001", "error",
+                              "print() inside a traced context runs only at "
+                              "trace time — use jax.debug.print or hoist it")
+            elif any(cname.startswith(p) for p in IMPURE_CALL_PREFIXES):
+                yield Finding(mod.rel, node.lineno, "SL001", "error",
+                              f"host-side call {cname}() inside a traced "
+                              "context bakes one trace-time value into the "
+                              "jaxpr — use jax.random / traced operands")
+        elif isinstance(node, (ast.Global, ast.Nonlocal)):
+            kw = "global" if isinstance(node, ast.Global) else "nonlocal"
+            yield Finding(mod.rel, node.lineno, "SL001", "error",
+                          f"{kw} {', '.join(node.names)} mutated inside a "
+                          "traced context — Python state does not replay "
+                          "across retraces; thread it through the carry")
+
+
+# ---------------------------------------------------------------------------
+# SL002 — dtype accumulation
+# ---------------------------------------------------------------------------
+
+def _unwrap_transpose(node: ast.AST) -> ast.AST:
+    while isinstance(node, ast.Attribute) and node.attr in ("T", "mT"):
+        node = node.value
+    return node
+
+
+def _is_f32_cast(node: ast.AST) -> bool:
+    node = _unwrap_transpose(node)
+    if not isinstance(node, ast.Call):
+        return False
+    cname = dotted_name(node.func)
+    if cname.endswith(".astype"):
+        return any(dotted_name(a).endswith("float32") for a in node.args)
+    if cname.endswith("float32"):
+        return True
+    if cname.rsplit(".", 1)[-1] == "asarray":
+        return any(dotted_name(a).endswith("float32")
+                   for a in list(node.args) + [k.value for k in node.keywords])
+    return False
+
+
+def _in_strict_dtype_dir(rel: str) -> bool:
+    parts = rel.split("/")
+    return any(d in parts for d in DTYPE_STRICT_DIRS)
+
+
+def check_dtype_accumulation(mod: ParsedModule) -> Iterable[Finding]:
+    strict = _in_strict_dtype_dir(mod.rel)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            cname = dotted_name(node.func)
+            if cname.rsplit(".", 1)[-1] == "dot_general":
+                if not any(k.arg == "preferred_element_type"
+                           for k in node.keywords):
+                    yield Finding(
+                        mod.rel, node.lineno, "SL002", "error",
+                        "dot_general without preferred_element_type="
+                        "jnp.float32 accumulates in the operand dtype — "
+                        "bf16 operands lose the f32 accumulation the "
+                        "Thm 3.2 error budget assumes")
+            elif strict and cname in _MATMUL_CALLS:
+                if not any(_is_f32_cast(a) for a in node.args):
+                    yield Finding(
+                        mod.rel, node.lineno, "SL002", "error",
+                        f"{cname}() with no operand cast to f32 — on bf16 "
+                        "storage this accumulates in bf16; cast an operand "
+                        "with .astype(jnp.float32) or use dot_general with "
+                        "preferred_element_type")
+            elif cname.rsplit(".", 1)[-1] == "VMEM":
+                if len(node.args) > 1 and \
+                        dotted_name(node.args[1]).endswith("bfloat16"):
+                    yield Finding(
+                        mod.rel, node.lineno, "SL002", "error",
+                        "bf16 VMEM scratch accumulator — in-kernel "
+                        "accumulation must stay f32 (store bf16 in HBM "
+                        "tiles, cast to f32 on fetch)")
+        elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            if strict and not (_is_f32_cast(node.left)
+                               or _is_f32_cast(node.right)):
+                yield Finding(
+                    mod.rel, node.lineno, "SL002", "error",
+                    "`@` matmul with no operand cast to f32 — on bf16 "
+                    "storage this accumulates in bf16; cast an operand "
+                    "with .astype(jnp.float32)")
+
+
+# ---------------------------------------------------------------------------
+# SL003 — bare assert on shape arithmetic
+# ---------------------------------------------------------------------------
+
+def _is_shape_arith(test: ast.AST) -> bool:
+    for node in ast.walk(test):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+            return True
+        if isinstance(node, ast.Attribute) and node.attr in (
+                "shape", "size", "ndim", "nbytes"):
+            return True
+        if isinstance(node, ast.Compare):
+            sides = [node.left] + list(node.comparators)
+            if any(isinstance(s, ast.BinOp) for s in sides):
+                return True
+    return False
+
+
+def check_bare_assert(mod: ParsedModule) -> Iterable[Finding]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assert) and _is_shape_arith(node.test):
+            cond = ast.unparse(node.test)
+            yield Finding(
+                mod.rel, node.lineno, "SL003", "error",
+                f"bare assert on shape arithmetic `{cond}` — raise "
+                "ValueError with the offending values instead (PR 2/3 "
+                "convention; asserts vanish under python -O)")
+
+
+AST_RULES = {
+    "SL001": check_trace_purity,
+    "SL002": check_dtype_accumulation,
+    "SL003": check_bare_assert,
+}
+
+
+def run_ast_checks(root: pathlib.Path,
+                   rules: Iterable[str] | None = None) -> list[Finding]:
+    wanted = set(rules) if rules is not None else set(AST_RULES)
+    findings: list[Finding] = []
+    for path in iter_py_files(root):
+        mod = ParsedModule(path, root)
+        for rule, check in AST_RULES.items():
+            if rule in wanted:
+                findings.extend(check(mod))
+    return findings

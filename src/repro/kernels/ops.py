@@ -88,7 +88,8 @@ def _solve(A, y, mask, lam, beta, key, K, rounds, block, loss, interpret,
     n, d = A.shape
     nblk = d // block
     x0 = jnp.zeros(d, A.dtype) if x0 is None else x0.astype(A.dtype)
-    z0 = A @ x0                       # = 0 for the cold start
+    # warm-start margin: accumulate in f32 even when A is stored bf16
+    z0 = A.astype(jnp.float32) @ x0.astype(jnp.float32)
 
     def objective(z, x):
         return obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
@@ -150,7 +151,9 @@ def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
     L = rounds // R
     x0 = (jnp.zeros(d, jnp.float32) if x0 is None
           else x0.astype(jnp.float32))
-    z0 = (A @ x0).astype(jnp.float32)  # = 0 for the cold start
+    # warm-start margin in f32 even for bf16-stored A (cast before the
+    # matmul, not after — the accumulation itself is what must stay f32)
+    z0 = A.astype(jnp.float32) @ x0
     draw = functools.partial(jax.random.choice, a=nblk, shape=(K,),
                              replace=False)
     keys = jax.random.split(key, rounds).reshape(L, R, -1)

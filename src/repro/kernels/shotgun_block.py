@@ -469,6 +469,35 @@ def fused_shotgun_delta_rounds(A, z, x, blk_idx, lam, beta, y, mask,
     return x_new.reshape(d), dz.reshape(n), h.reshape(())
 
 
+# Per-core VMEM ceiling every fused config must clear (shotgun-lint SL101
+# and the benchmark drivers both check against this; ``auto_tile_n`` sizes
+# tiles against a lower 12 MiB default to leave compiler slack inside it).
+VMEM_BUDGET = 16 * 2 ** 20
+
+
+def fused_vmem_bytes(n: int, d: int, K: int, block: int = BLOCK,
+                     tile_n: int | None = None, emit_dz: bool = False,
+                     a_bytes: int = 4) -> int:
+    """f32 VMEM resident set of the dense fused kernel — the twin of
+    ``shotgun_sparse.fused_sparse_vmem_bytes`` for ``_fused_call``'s
+    buffers: the z0/y/mask in-vectors, z/r scratch (+ Δz scratch and out
+    for the ``emit_dz`` engine variant, replacing the z out), the three
+    full-d x buffers (x0/scratch/out), the two (K, block) g/δ scratches,
+    and the double-buffered streamed (tile_n, block) A tile.  ``a_bytes``
+    is the stored dtype of A (4 = f32, 2 = bf16 — accumulation stays f32
+    either way, so only the streamed tile shrinks).  R never enters: only
+    the (R, K) scalar-prefetch index matrix and the (R, 1) trace outputs
+    scale with R, both negligible."""
+    if tile_n is None:
+        tile_n = auto_tile_n(n, block, d=d)
+    # z0/y/mask in + z/r scratch + z-out, or +dz scratch/out - z-out
+    vecs = (7 if emit_dz else 6) * n * 4
+    xbuf = 3 * d * 4                               # x0, x scratch, x out
+    kbuf = 2 * K * block * 4                       # g, delta
+    tiles = 2 * tile_n * block * a_bytes           # double-buffered A tile
+    return vecs + xbuf + kbuf + tiles
+
+
 def auto_tile_n(n: int, block: int = BLOCK, d: int = 0,
                 vmem_budget: int = 12 * 2 ** 20):
     """Largest sample tile that keeps the fused kernel's whole VMEM resident

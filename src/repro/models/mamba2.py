@@ -96,7 +96,8 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk, unroll=False, edt=jnp.bfloat16):
     """
     b, s, h, p = x.shape
     n = Bm.shape[-1]
-    assert s % chunk == 0
+    if s % chunk:
+        raise ValueError(f"seq_len={s} is not a multiple of chunk={chunk}")
     c = s // chunk
     # rescale by dt (the "discretization"); dt is f32, result cast to edt
     xdt = (x.astype(jnp.float32) * dt[..., None]).astype(edt)  # (b, s, h, p)

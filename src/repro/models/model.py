@@ -89,8 +89,10 @@ class ModelConfig:
 
     @property
     def num_groups(self) -> int:
-        assert self.num_layers % len(self.pattern) == 0, (
-            self.name, self.num_layers, len(self.pattern))
+        if self.num_layers % len(self.pattern):
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} is not a "
+                f"multiple of the layer pattern length {len(self.pattern)}")
         return self.num_layers // len(self.pattern)
 
     @property

@@ -75,7 +75,10 @@ def moe_apply(p, x, cfg, dtype):
 
     g = max(1, t // GROUP_SIZE)
     tg = t // g
-    assert g * tg == t, (t, g, tg)
+    if g * tg != t:
+        raise ValueError(
+            f"token count t={t} does not split into g={g} groups of "
+            f"tg={tg} (b={b}, s={s}, GROUP_SIZE={GROUP_SIZE})")
     xt = x.reshape(g, tg, d)
     gate_vals, gate_idx = _route(p, xt, cfg)            # (g, tg, k)
 

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""shotgun-lint CLI — the repo's own static-analysis pass (DESIGN §10).
+
+    python tools/shotgun_lint.py --all            # every rule
+    python tools/shotgun_lint.py --ast            # SL001-SL003, no jax
+    python tools/shotgun_lint.py --trace          # SL101-SL103
+    python tools/shotgun_lint.py --rules SL002,SL101 --root /some/tree
+
+Exit status: 0 when no unallowlisted finding, 1 otherwise (2 on bad
+usage).  Output is deterministic — canonically sorted findings, one per
+line — so CI can diff it.  There is no --fix: findings are fixed by hand
+or vetted into ``src/repro/analyze/allowlist.toml``.
+
+Trace rules import the checked tree and want a multi-device jax: the CLI
+force-sets 8 host devices (unless XLA_FLAGS is already set) *before* the
+first jax import, which is why it — not the library — owns the env var.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="shotgun_lint",
+                                 description=__doc__.split("\n")[0])
+    level = ap.add_mutually_exclusive_group()
+    level.add_argument("--all", action="store_true",
+                       help="run every rule (default)")
+    level.add_argument("--ast", action="store_true",
+                       help="AST rules only (SL001-SL003; no jax import)")
+    level.add_argument("--trace", action="store_true",
+                       help="trace rules only (SL101-SL103)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (overrides the level "
+                         "flags), e.g. SL002,SL101")
+    ap.add_argument("--root", default=str(REPO),
+                    help="tree to check (default: this repo)")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist TOML (default: the repo's "
+                         "analyze/allowlist.toml; 'none' disables)")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.root).resolve()
+    if not root.exists():
+        ap.error(f"--root {root} does not exist")
+
+    # the lint package itself always comes from this repo; the *checked*
+    # tree's own src goes first so trace rules import the tree under test
+    for src in (REPO / "src", root / "src"):
+        if src.is_dir() and str(src) not in sys.path:
+            sys.path.insert(0, str(src))
+
+    from repro.analyze.runner import (ALL_RULES, DEFAULT_ALLOWLIST,
+                                      RULE_TITLES, run_checkers)
+
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    elif args.ast:
+        rules = [r for r in ALL_RULES if r.startswith("SL0")]
+    elif args.trace:
+        rules = [r for r in ALL_RULES if r.startswith("SL1")]
+    else:
+        rules = list(ALL_RULES)
+
+    if any(r.startswith("SL1") for r in rules):
+        # must land before the first jax import (jax reads it once)
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+    allowlist = DEFAULT_ALLOWLIST if args.allowlist is None \
+        else (None if args.allowlist == "none" else args.allowlist)
+
+    try:
+        report = run_checkers(root, rules=rules, allowlist=allowlist)
+    except ValueError as e:
+        ap.error(str(e))
+
+    for f in report.findings:
+        print(f.render())
+    for e in report.unused_allows:
+        print(f"note: stale allowlist entry (matched nothing): "
+              f"rule={e.rule} path={e.path} match={e.match!r}")
+    titles = ", ".join(f"{r} {RULE_TITLES[r]}" for r in rules)
+    print(f"shotgun-lint: {len(report.findings)} finding(s), "
+          f"{len(report.suppressed)} allowlisted, over [{titles}]")
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
