@@ -34,7 +34,7 @@ def emit(rows, name):
 # Row keys that are cross-PR trajectory fields: lifted to the top level of
 # the merged artifact so harnesses that read only the root object (not the
 # per-shape rows) still see the headline numbers.
-TRAJECTORY_KEYS = ("overlap_efficiency",)
+TRAJECTORY_KEYS = ("overlap_efficiency", "slot_occupancy")
 TRAJECTORY_PREFIXES = ("speedup_",)
 
 

@@ -13,16 +13,17 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_sharded, bench_sparse,
-                            fig2_parallelism, fig3_lasso_solvers,
-                            fig4_logreg, fig5_speedup, roofline,
-                            shotgun_scale)
+    from benchmarks import (bench_kernels, bench_serve, bench_sharded,
+                            bench_sparse, fig2_parallelism,
+                            fig3_lasso_solvers, fig4_logreg, fig5_speedup,
+                            roofline, shotgun_scale)
     ALL = {
         "fig2": fig2_parallelism.run,
         "fig3": fig3_lasso_solvers.run,
         "fig4": fig4_logreg.run,
         "fig5": fig5_speedup.run,
         "kernels": bench_kernels.run,
+        "serve": bench_serve.run,
         "sharded": bench_sharded.run,
         "sparse": bench_sparse.run,
         "shotgun_scale": shotgun_scale.run,

@@ -93,14 +93,14 @@ def config_vmem_bytes(cfg: dict) -> tuple[int, str, int]:
         bytes_ = sb.fused_vmem_bytes(
             cfg["n"], cfg["d"], cfg["K"], block=cfg.get("block", sb.BLOCK),
             tile_n=tile_n, emit_dz=cfg.get("emit_dz", False),
-            a_bytes=cfg.get("a_bytes", 4))
+            a_bytes=cfg.get("a_bytes", 4), slots=cfg.get("slots", 1))
         fn = sb.fused_vmem_bytes
     else:
         from repro.kernels import shotgun_sparse as ss
         bytes_ = ss.fused_sparse_vmem_bytes(
             cfg["n"], cfg["nblk"], cfg["tile"], cfg["K"],
             block=cfg.get("block", 128), emit_dz=cfg.get("emit_dz", False),
-            val_bytes=cfg.get("val_bytes", 4))
+            val_bytes=cfg.get("val_bytes", 4), slots=cfg.get("slots", 1))
         fn = ss.fused_sparse_vmem_bytes
     path = pathlib.Path(inspect.getsourcefile(fn))
     line = inspect.getsourcelines(fn)[1]
@@ -133,6 +133,21 @@ def registered_vmem_configs(root: pathlib.Path) -> list[dict]:
     for row in rows:
         if not {"n", "d", "K"} <= set(row):
             continue                       # sharded wall-time rows
+        if row.get("bench") == "serve":
+            # continuous-batched service rows (DESIGN §11): the stacked
+            # kernel holds ``slots`` copies of every per-problem scratch
+            # buffer, so the budget is checked on the whole stack (the
+            # service never emits dz).  Shapes are the stream canvas —
+            # samples padded to a TILE_N multiple, features to BLOCK.
+            from repro.kernels.shotgun_block import BLOCK, TILE_N
+            slots = row.get("slots", 1)
+            configs.append({
+                "kind": "dense", "n": row["n"] + (-row["n"]) % TILE_N,
+                "d": row["d"] + (-row["d"]) % BLOCK, "K": row["K"],
+                "slots": slots,
+                "label": f"serve n={row['n']} d={row['d']} K={row['K']} "
+                         f"slots={slots}"})
+            continue
         for emit_dz in (False, True):
             if row.get("bench") == "sparse":
                 configs.append({
@@ -266,7 +281,59 @@ def default_retrace_targets() -> list[tuple]:
                                   engine="scalar"))
         raise ValueError(f"no retrace target for solver {name!r}")
 
-    return [(name,) + calls(name) for name in SOLVER_NAMES]
+    targets = [(name,) + calls(name) for name in SOLVER_NAMES]
+    targets.extend(_batched_retrace_targets())
+    return targets
+
+
+def _batched_retrace_targets() -> list[tuple]:
+    """Batched entry points (DESIGN §11.2): the serving admission contract
+    promises ONE jaxpr per stream canvas, so solving a second stream of
+    different problems/λ/keys on the same canvas must hit the cached
+    batched kernels — a leak here recompiles on every admission."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import objectives as obj
+    from repro.core.batched import batched_block_shotgun_solve
+    from repro.data.sparse import BlockedCSC
+
+    def dense_probs(seed):
+        rng = np.random.default_rng(seed)
+        out = []
+        for s in range(2):
+            A = rng.standard_normal((192, 384)).astype(np.float32)
+            y = rng.standard_normal(192).astype(np.float32)
+            out.append(obj.make_problem(jnp.asarray(A), jnp.asarray(y),
+                                        lam=0.1 * (s + 1) + 0.01 * seed))
+        return out
+
+    def sparse_probs(seed):
+        # fixed nnz-tile depth: the canvas (not the draw) fixes the shape
+        out = []
+        for p in dense_probs(seed):
+            A = np.array(p.A)              # writable copy
+            A[np.random.default_rng(seed + 7).random(A.shape) < 0.8] = 0.0
+            sp = obj.make_problem(jnp.asarray(A), p.y, lam=float(p.lam))
+            out.append(sp._replace(A=BlockedCSC.from_dense(sp.A, block=128,
+                                                           tile=64)))
+        return out
+
+    def solve(probs, seed):
+        keys = [jax.random.PRNGKey(seed + s) for s in range(len(probs))]
+        return batched_block_shotgun_solve(probs, keys, 1, 2,
+                                           rounds_per_launch=2,
+                                           interpret=True)
+
+    return [
+        ("batched_dense",
+         lambda: solve(dense_probs(0), 0),
+         lambda: solve(dense_probs(1), 2)),
+        ("batched_sparse",
+         lambda: solve(sparse_probs(0), 0),
+         lambda: solve(sparse_probs(1), 2)),
+    ]
 
 
 def check_retrace(root: pathlib.Path,

@@ -477,7 +477,7 @@ VMEM_BUDGET = 16 * 2 ** 20
 
 def fused_vmem_bytes(n: int, d: int, K: int, block: int = BLOCK,
                      tile_n: int | None = None, emit_dz: bool = False,
-                     a_bytes: int = 4) -> int:
+                     a_bytes: int = 4, slots: int = 1) -> int:
     """f32 VMEM resident set of the dense fused kernel — the twin of
     ``shotgun_sparse.fused_sparse_vmem_bytes`` for ``_fused_call``'s
     buffers: the z0/y/mask in-vectors, z/r scratch (+ Δz scratch and out
@@ -487,7 +487,14 @@ def fused_vmem_bytes(n: int, d: int, K: int, block: int = BLOCK,
     is the stored dtype of A (4 = f32, 2 = bf16 — accumulation stays f32
     either way, so only the streamed tile shrinks).  R never enters: only
     the (R, K) scalar-prefetch index matrix and the (R, 1) trace outputs
-    scale with R, both negligible."""
+    scale with R, both negligible.
+
+    ``slots`` is the batched-launch multiplier (DESIGN §11): the vmapped
+    entry points (``kernels/batched.py``) stack S independent problems on
+    a leading axis, so the stacked-slot resident set is modeled as
+    slots × the per-problem set — conservative on hardware, where the
+    batch axis is the outermost (sequential) grid dimension, and exact in
+    interpret mode, where vmap physically batches every buffer."""
     if tile_n is None:
         tile_n = auto_tile_n(n, block, d=d)
     # z0/y/mask in + z/r scratch + z-out, or +dz scratch/out - z-out
@@ -495,7 +502,7 @@ def fused_vmem_bytes(n: int, d: int, K: int, block: int = BLOCK,
     xbuf = 3 * d * 4                               # x0, x scratch, x out
     kbuf = 2 * K * block * 4                       # g, delta
     tiles = 2 * tile_n * block * a_bytes           # double-buffered A tile
-    return vecs + xbuf + kbuf + tiles
+    return slots * (vecs + xbuf + kbuf + tiles)
 
 
 def auto_tile_n(n: int, block: int = BLOCK, d: int = 0,

@@ -417,7 +417,7 @@ def fused_sparse_shotgun_delta_rounds(rows, vals, z, x, blk_idx, lam, beta,
 
 def fused_sparse_vmem_bytes(n: int, nblk: int, tile: int, K: int,
                             block: int = BLOCK, emit_dz: bool = False,
-                            val_bytes: int = 4) -> int:
+                            val_bytes: int = 4, slots: int = 1) -> int:
     """f32/int32 VMEM resident set of the fused sparse kernel (DESIGN §8.3):
     z/r scratch (+ Δz for the engine variant), the z0/y in- and z out-
     vectors, the three full-width x buffers (x0/scratch/out), the K-row
@@ -428,7 +428,10 @@ def fused_sparse_vmem_bytes(n: int, nblk: int, tile: int, K: int,
     enters — only the (R·K) scalar-prefetch index matrix and the per-round
     (1, 1) trace outputs scale with R, both negligible — so the tile size
     (and through it the density) is what bounds the shapes this kernel
-    accepts, not the rounds-per-launch."""
+    accepts, not the rounds-per-launch.  ``slots`` is the batched-launch
+    multiplier (DESIGN §11): the vmapped entry points stack S slots on a
+    leading axis, modeled as slots × the per-problem resident set (see
+    ``shotgun_block.fused_vmem_bytes``)."""
     # z0-in, y-in, z_s, r_s, plus z-out (margin-owning) or dz_s + dz-out
     # minus z-out (engine variant): 5 vs 6 n-vectors
     vecs = (6 if emit_dz else 5) * n * 4
@@ -436,4 +439,4 @@ def fused_sparse_vmem_bytes(n: int, nblk: int, tile: int, K: int,
     dbuf = K * block * 4                           # delta scratch
     # rows (int32) + vals (val_bytes), each double-buffered
     tiles = 2 * tile * block * (4 + val_bytes)
-    return vecs + xbuf + dbuf + tiles
+    return slots * (vecs + xbuf + dbuf + tiles)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS
+from repro.launch.slots import SlotBoard
 from repro.models import model as M
 
 
@@ -49,8 +50,9 @@ class Engine:
         self.params = M.init(cfg, jax.random.PRNGKey(seed))
         self.cache = M.init_cache(cfg, batch, max_len)
         self.pos = jnp.zeros(batch, jnp.int32)       # next position per slot
-        self.slots: list[Request | None] = [None] * batch
-        self.age = [0] * batch     # decode steps since the slot was admitted
+        # slot/queue bookkeeping lives on the shared state machine
+        # (launch/slots.py) — the engine only does prefill/decode
+        self.board = SlotBoard(batch)
 
         cfgc = cfg
 
@@ -79,6 +81,14 @@ class Engine:
         self._prefill_into = _prefill_into
         self._decode = _decode
 
+    @property
+    def slots(self):
+        return self.board.slots
+
+    @property
+    def age(self):
+        return self.board.age
+
     def admit(self, req: Request, slot: int):
         # context = prompt + everything generated so far: a fresh request
         # prefills its prompt, a deadline-evicted one re-prefills its whole
@@ -91,9 +101,8 @@ class Engine:
             self.params, self.cache, toks, slot, self.pos)
         nxt = int(jnp.argmax(last_logits[0]))
         req.out.append(nxt)
-        self.slots[slot] = req
+        self.board.place(req, slot)
         self.pos = self.pos.at[slot].set(len(ctx))
-        self.age[slot] = 0
         if nxt == self.eos_id or len(req.out) >= req.max_new \
                 or len(ctx) + 1 >= self.max_len:
             req.done = True
@@ -103,17 +112,17 @@ class Engine:
         nxt, self.cache = self._decode(self.params, self.cache, toks, self.pos)
         self.pos = self.pos + jnp.array(
             [1 if r and not r.done else 0 for r in self.slots], jnp.int32)
+        self.board.tick()
         for i, r in enumerate(self.slots):
             if r is None or r.done:
                 continue
             t = int(nxt[i])
             r.out.append(t)
-            self.age[i] += 1
             if t == self.eos_id or len(r.out) >= r.max_new:
                 r.done = True
 
     def free_slots(self):
-        return [i for i, r in enumerate(self.slots) if r is None or r.done]
+        return self.board.free_slots()
 
 
 def serve(arch: str, *, requests: int = 12, batch: int = 4, max_new: int = 24,
@@ -135,36 +144,23 @@ def serve(arch: str, *, requests: int = 12, batch: int = 4, max_new: int = 24,
     if cfg.is_encdec:
         raise SystemExit("serve: use LM archs (whisper needs audio frontend)")
     eng = Engine(cfg, batch=batch, max_len=max_len, seed=seed)
+    board = eng.board
+    board.max_rounds = max_rounds
+    board.max_evictions = max_evictions
     rng = np.random.default_rng(seed)
-    queue = [Request(i, rng.integers(1, cfg.vocab_size, prompt_len,
-                                     dtype=np.int32), max_new)
-             for i in range(requests)]
-    finished: list[Request] = []
+    board.queue.extend(
+        Request(i, rng.integers(1, cfg.vocab_size, prompt_len,
+                                dtype=np.int32), max_new)
+        for i in range(requests))
     t0 = time.time()
     steps = 0
-    while queue or any(r and not r.done for r in eng.slots):
-        for slot in eng.free_slots():
-            old = eng.slots[slot]
-            if old is not None and old.done:
-                finished.append(old)
-                eng.slots[slot] = None
-            if queue:
-                eng.admit(queue.pop(0), slot)   # continuous batching refill
-        if any(r and not r.done for r in eng.slots):
+    while board.pending():
+        board.refill(eng.admit)              # continuous batching refill
+        if board.live():
             eng.step()
             steps += 1
-        if max_rounds is not None:
-            for i, r in enumerate(eng.slots):
-                if r is None or r.done or eng.age[i] < max_rounds:
-                    continue
-                r.evictions += 1
-                eng.slots[i] = None
-                if r.evictions > max_evictions:
-                    r.done = True            # give up; keep partial output
-                    finished.append(r)
-                else:
-                    queue.append(r)          # re-queue at the tail
-    finished.extend(r for r in eng.slots if r is not None)
+        board.evict_stale()
+    finished = board.drain()
     dt = time.time() - t0
     toks = sum(len(r.out) for r in finished)
     if not quiet:
