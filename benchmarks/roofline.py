@@ -47,6 +47,64 @@ def shotgun_round_model(n, d, K, block=128, a_bytes=4, fused_single=None):
     return rows
 
 
+# VPU flop-equivalents charged per transcendental (exp / sigmoid / log1p
+# chain of the stable logistic tile) — coarse, but the point of the model
+# is that even at 8x a madd the term is O(n) against O(K·block·n) madds
+TRANS_FLOPS = 8
+
+
+def logistic_round_model(n, d, K, block=128, a_bytes=4, newton=False,
+                         fused_single=None):
+    """Logistic twin of ``shotgun_round_model`` (DESIGN §12).
+
+    HBM traffic is IDENTICAL to the squared-loss round: the loss seam swaps
+    the residual tile computed from the VMEM-resident margin, and the margin
+    z (plus y, which already streams in for the objective) is all the
+    logistic tile reads.  What changes is flops:
+
+      * every kernel pays one stable-sigmoid/log1p chain per resident
+        sample per round (TRANS_FLOPS · n) for the residual r = -y σ(-y z)
+        and the log1p objective tile;
+      * the fused Newton variant (Bian et al.) additionally squares the
+        already-fetched A tile and accumulates the per-block curvature
+        h_b = Σ_i a_ib² σ_i(1-σ_i) — 2·K·block·n madd-class flops, zero
+        extra bytes (the (n,1) weight scratch and (K,block) accumulator
+        live in VMEM, see ``fused_vmem_bytes(loss=)``).
+
+    So the logistic round is *more* compute-dense at the same traffic, and
+    the memory-bound verdict of the lasso model can only tighten — the loss
+    seam is roofline-free.
+    """
+    rows = shotgun_round_model(n, d, K, block=block, a_bytes=a_bytes,
+                               fused_single=fused_single)
+    for name, r in rows.items():
+        r["flops"] += TRANS_FLOPS * n
+        if newton and name == "fused":
+            r["flops"] += 2 * K * block * n
+        r["intensity"] = r["flops"] / r["bytes"]
+        r["t_flops_us"] = r["flops"] / MXU_FLOPS * 1e6
+        r["bound"] = ("memory" if r["t_mem_us"] > r["t_flops_us"]
+                      else "compute")
+    return rows
+
+
+def logistic_table(shapes=((8192, 256, 2), (1024, 2048, 4))):
+    out = [f"{'kernel':16s} {'n':>6s} {'d':>6s} {'K':>3s} {'GB/round':>10s} "
+           f"{'flops/B':>8s} {'t_mem_us':>9s} {'bound':>7s}"]
+    for (n, d, K) in shapes:
+        for newton in (False, True):
+            tag = "_newton" if newton else ""
+            for name, r in logistic_round_model(n, d, K,
+                                                newton=newton).items():
+                if newton and name != "fused":
+                    continue
+                out.append(f"{name + tag:16s} {n:6d} {d:6d} {K:3d} "
+                           f"{r['bytes'] / 1e9:10.6f} "
+                           f"{r['intensity']:8.1f} "
+                           f"{r['t_mem_us']:9.3f} {r['bound']:>7s}")
+    return "\n".join(out)
+
+
 def sparse_round_model(n, d, K, tile, block=128, R=8, val_bytes=4):
     """Per-round HBM bytes/flops of the Block-Shotgun round variants on a
     dense design vs a BlockedCSC one (DESIGN §8).  Sparse tiles carry both
@@ -165,6 +223,7 @@ def fmt_table(rows, mesh="single"):
 
 def run():
     print(shotgun_table(), flush=True)
+    print(logistic_table(), flush=True)
     print(sharded_wire_table(), flush=True)
     rows = load("final")
     for mesh in ("single", "multi"):

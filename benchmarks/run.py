@@ -21,6 +21,7 @@ def main() -> None:
         "fig2": fig2_parallelism.run,
         "fig3": fig3_lasso_solvers.run,
         "fig4": fig4_logreg.run,
+        "logreg": fig4_logreg.run,   # alias: the bench=logreg kernel rows
         "fig5": fig5_speedup.run,
         "kernels": bench_kernels.run,
         "serve": bench_serve.run,

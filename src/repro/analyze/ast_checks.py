@@ -20,6 +20,14 @@ imports of the checked code, so these run anywhere in milliseconds.
                            — the PR 2/3 convention is ``ValueError`` carrying
                            the offending values (asserts vanish under
                            ``python -O`` and lose the operands).
+  SL004  raw exp/log in kernels  ``jnp.exp`` / ``jnp.log`` in a traced
+                           context in ``kernels/`` outside the blessed
+                           stable-logistic tile helper
+                           (``shotgun_block._stable_logistic_tile``): naked
+                           exp overflows f32 at z ≈ 89 and naked log(σ)
+                           underflows to -inf — every logistic tile must go
+                           through the max(m,0)+log1p(exp(−|m|)) form
+                           (DESIGN §12).
 
 Traced-context detection is deliberately syntactic and conservative-in,
 liberal-out: a function counts as traced when it is (a) decorated with
@@ -276,10 +284,56 @@ def check_bare_assert(mod: ParsedModule) -> Iterable[Finding]:
                 "convention; asserts vanish under python -O)")
 
 
+# ---------------------------------------------------------------------------
+# SL004 — raw exp/log in kernel bodies
+# ---------------------------------------------------------------------------
+
+# The one function allowed to spell jnp.exp/jnp.log in kernels/: the
+# numerically-stable logistic tile (sigmoid + log1p margin form, DESIGN §12).
+STABLE_LOGISTIC_HELPER = "_stable_logistic_tile"
+
+_RAW_EXP_LOG = {"jnp.exp", "jnp.log", "jax.numpy.exp", "jax.numpy.log"}
+
+
+def _in_kernels_dir(rel: str) -> bool:
+    return "kernels" in rel.split("/")
+
+
+def _inside_blessed_helper(mod: ParsedModule, node: ast.AST) -> bool:
+    while node is not None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == STABLE_LOGISTIC_HELPER:
+            return True
+        node = mod.parents.get(node)
+    return False
+
+
+def check_raw_exp_log(mod: ParsedModule) -> Iterable[Finding]:
+    if not _in_kernels_dir(mod.rel):
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        cname = dotted_name(node.func)
+        if cname not in _RAW_EXP_LOG:
+            continue
+        if not mod.in_traced_context(node):
+            continue
+        if _inside_blessed_helper(mod, node):
+            continue
+        yield Finding(
+            mod.rel, node.lineno, "SL004", "error",
+            f"raw {cname}() in a kernel body — exp overflows f32 at "
+            "z ≈ 89 and log(σ) underflows to -inf; route logistic math "
+            f"through {STABLE_LOGISTIC_HELPER} (sigmoid + log1p margin "
+            "form, DESIGN §12)")
+
+
 AST_RULES = {
     "SL001": check_trace_purity,
     "SL002": check_dtype_accumulation,
     "SL003": check_bare_assert,
+    "SL004": check_raw_exp_log,
 }
 
 

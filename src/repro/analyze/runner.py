@@ -17,12 +17,13 @@ from repro.analyze.allowlist import (AllowEntry, apply_allowlist,
 from repro.analyze.ast_checks import AST_RULES, run_ast_checks
 from repro.analyze.findings import Finding, sort_findings
 
-ALL_RULES = ("SL001", "SL002", "SL003", "SL101", "SL102", "SL103")
+ALL_RULES = ("SL001", "SL002", "SL003", "SL004", "SL101", "SL102", "SL103")
 
 RULE_TITLES = {
     "SL001": "trace purity",
     "SL002": "dtype accumulation",
     "SL003": "bare shape assert",
+    "SL004": "raw exp/log in kernels",
     "SL101": "VMEM budget",
     "SL102": "retrace leak",
     "SL103": "spec consistency",

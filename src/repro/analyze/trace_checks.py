@@ -93,14 +93,16 @@ def config_vmem_bytes(cfg: dict) -> tuple[int, str, int]:
         bytes_ = sb.fused_vmem_bytes(
             cfg["n"], cfg["d"], cfg["K"], block=cfg.get("block", sb.BLOCK),
             tile_n=tile_n, emit_dz=cfg.get("emit_dz", False),
-            a_bytes=cfg.get("a_bytes", 4), slots=cfg.get("slots", 1))
+            a_bytes=cfg.get("a_bytes", 4), slots=cfg.get("slots", 1),
+            loss=cfg.get("loss", "lasso"))
         fn = sb.fused_vmem_bytes
     else:
         from repro.kernels import shotgun_sparse as ss
         bytes_ = ss.fused_sparse_vmem_bytes(
             cfg["n"], cfg["nblk"], cfg["tile"], cfg["K"],
             block=cfg.get("block", 128), emit_dz=cfg.get("emit_dz", False),
-            val_bytes=cfg.get("val_bytes", 4), slots=cfg.get("slots", 1))
+            val_bytes=cfg.get("val_bytes", 4), slots=cfg.get("slots", 1),
+            loss=cfg.get("loss", "lasso"))
         fn = ss.fused_sparse_vmem_bytes
     path = pathlib.Path(inspect.getsourcefile(fn))
     line = inspect.getsourcelines(fn)[1]
@@ -147,6 +149,19 @@ def registered_vmem_configs(root: pathlib.Path) -> list[dict]:
                 "slots": slots,
                 "label": f"serve n={row['n']} d={row['d']} K={row['K']} "
                          f"slots={slots}"})
+            continue
+        if row.get("bench") == "logreg":
+            # fused logistic rows (DESIGN §12): budget both kernel twins —
+            # the gradient-form tile and the Newton variant whose curvature
+            # scratch adds one n-vector and one (K, block) accumulator.
+            for loss in ("logistic", "logistic_newton"):
+                for emit_dz in (False, True):
+                    configs.append({
+                        "kind": "dense", "n": row["n"], "d": row["d"],
+                        "K": row["K"], "tile_n": row.get("tile_n"),
+                        "emit_dz": emit_dz, "loss": loss,
+                        "label": f"logreg n={row['n']} d={row['d']} "
+                                 f"K={row['K']} loss={loss}"})
             continue
         for emit_dz in (False, True):
             if row.get("bench") == "sparse":
@@ -246,6 +261,11 @@ def default_retrace_targets() -> list[tuple]:
     lprob = obj.make_problem(Al, yl, lam=0.05, loss=obj.LOGISTIC)
     lprob2 = obj.Problem(A=lprob.A, y=lprob.y, lam=jnp.float32(0.06),
                          loss=lprob.loss, scales=lprob.scales)
+    Als, yls, _ = syn.logistic_data(seed=0, n=256, d=128, density=0.1,
+                                    layout="bcsc")
+    slprob = obj.make_problem(Als, yls, lam=0.05, loss=obj.LOGISTIC)
+    slprob2 = obj.Problem(A=slprob.A, y=slprob.y, lam=jnp.float32(0.06),
+                          loss=slprob.loss, scales=slprob.scales)
     k0, k1 = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
 
     def calls(name):
@@ -279,6 +299,16 @@ def default_retrace_targets() -> list[tuple]:
                                   engine="scalar"),
                     lambda: solve(prob2, k1, P_local=2, rounds=2,
                                   engine="scalar"))
+        if name == "shotgun_logreg_fused":
+            return (lambda: solve(lprob, k0, K=1, rounds=2,
+                                  rounds_per_launch=2, interpret=True),
+                    lambda: solve(lprob2, k1, K=1, rounds=2,
+                                  rounds_per_launch=2, interpret=True))
+        if name == "sparse_logreg_fused":
+            return (lambda: solve(slprob, k0, K=1, rounds=2,
+                                  rounds_per_launch=2, interpret=True),
+                    lambda: solve(slprob2, k1, K=1, rounds=2,
+                                  rounds_per_launch=2, interpret=True))
         raise ValueError(f"no retrace target for solver {name!r}")
 
     targets = [(name,) + calls(name) for name in SOLVER_NAMES]

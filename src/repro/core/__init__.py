@@ -5,6 +5,7 @@ Public API:
     shooting_solve, shotgun_solve, shotgun_dup_solve      (Alg. 1 / Alg. 2)
     shotgun_cdn_solve, shooting_cdn_solve                 (CDN variants)
     get_solver, SOLVER_NAMES                              (solver registry)
+    SolverSpec                                            (declarative solve spec)
     make_engine, ENGINE_NAMES                             (round-engine registry)
     spectral_radius, p_star                               (parallelism limit)
     solve_path                                            (lambda continuation)
@@ -20,6 +21,7 @@ from repro.core.objectives import (LASSO, LOGISTIC, Problem, DupProblem,
                                    make_problem, dup_from, objective,
                                    lambda_max, soft_threshold, unscale_x,
                                    matvec, rmatvec, gather_cols)
+from repro.core.spec import SolverSpec
 from repro.core.shotgun import (shooting_solve, shotgun_solve,
                                 shotgun_dup_solve, rounds_to_tolerance,
                                 diverged, get_solver, SOLVER_NAMES,

@@ -42,6 +42,7 @@ from repro.core import health
 from repro.core import objectives as obj
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
+from repro.core.spec import SolverSpec, reject_legacy_kwargs
 from repro.data.sparse import BlockedCSC, bcsc_matvec, pad_feature_blocks
 from repro.kernels.batched import (batched_draw_blocks,
                                    batched_fused_shotgun_rounds,
@@ -227,11 +228,14 @@ def _stack_x0(x0s, S, d_pad):
     return jnp.stack(cols)
 
 
-def batched_block_shotgun_solve(probs: Sequence[Problem], keys, K: int,
-                                rounds: int, rounds_per_launch: int = 8,
+def batched_block_shotgun_solve(probs: Sequence[Problem], keys,
+                                K: int | None = None,
+                                rounds: int | None = None,
+                                rounds_per_launch: int = 8,
                                 interpret: bool = True,
                                 meta: BatchMeta | None = None,
-                                x0s=None, tile_n: int | None = None
+                                x0s=None, tile_n: int | None = None,
+                                spec: SolverSpec | None = None
                                 ) -> Result:
     """Fixed-budget stacked solve: every slot runs the full round budget in
     lock-step batched launches.  Slot *i* is bit-identical in x to
@@ -246,7 +250,27 @@ def batched_block_shotgun_solve(probs: Sequence[Problem], keys, K: int,
     Returns a stacked ``Result`` (leaves carry the leading S axis; x is
     sliced to each problem's true d only by the caller, since slots may
     have heterogeneous d on one canvas).
+
+    ``spec=SolverSpec(...)`` is the canonical interface (DESIGN §12):
+    K = ceil(spec.P / block) and rounds = spec.rounds, with ``spec.loss``
+    validated against every admitted problem's loss.  The legacy
+    (K, rounds) kwargs still work but emit a ``DeprecationWarning``.
     """
+    if spec is not None:
+        reject_legacy_kwargs(spec, K=K, rounds=rounds)
+        for p_i in probs:
+            spec.check_loss(p_i.loss)
+        K = max(1, -(-spec.P // BLOCK))
+        rounds = spec.rounds
+    else:
+        if K is None or rounds is None:
+            raise TypeError(
+                "batched_block_shotgun_solve needs (K, rounds) or spec=")
+        import warnings
+        warnings.warn(
+            "batched_block_shotgun_solve(K=..., rounds=...) kwargs are "
+            "deprecated; pass spec=SolverSpec(...)", DeprecationWarning,
+            stacklevel=2)
     R = rounds_per_launch
     if rounds % R:
         raise ValueError(f"rounds={rounds} not divisible by "
@@ -305,7 +329,10 @@ class WarmStartCache:
     tolerance ``lam_rtol``) and falls back to the NEAREST cached λ for the
     same problem_id otherwise — λ-path neighbours are the classic warm
     start (Sec. 4.1.1), so repeat traffic that lands between sweep points
-    still starts near the solution manifold.  Entries store the true-d
+    still starts near the solution manifold.  Keys carry the problem's
+    loss tag (default "lasso" for legacy callers), so a lasso warm start
+    can never seed a logistic solve of the same problem_id.  Entries store
+    the true-d
     (unpadded) x as host numpy; admission re-pads onto whatever canvas the
     consuming stream uses.  Shared by ``launch/solver_serve.py`` and
     ``core.path.solve_path(cache=...)`` — one warm-start code path.
@@ -313,20 +340,20 @@ class WarmStartCache:
 
     def __init__(self, lam_rtol: float = 1e-6):
         self.lam_rtol = lam_rtol
-        self._store: dict = {}          # pid -> {float(lam): np.ndarray}
+        self._store: dict = {}     # (pid, loss) -> {float(lam): np.ndarray}
         self.stats = CacheStats()
 
     def __len__(self) -> int:
         return sum(len(v) for v in self._store.values())
 
-    def put(self, problem_id, lam, x) -> None:
-        self._store.setdefault(problem_id, {})[float(lam)] = \
+    def put(self, problem_id, lam, x, loss: str = "lasso") -> None:
+        self._store.setdefault((problem_id, loss), {})[float(lam)] = \
             np.asarray(x, np.float32)
 
-    def get(self, problem_id, lam):
+    def get(self, problem_id, lam, loss: str = "lasso"):
         """(x0 | None, kind) with kind in "exact" / "near" / "miss"."""
         lam = float(lam)
-        entries = self._store.get(problem_id)
+        entries = self._store.get((problem_id, loss))
         if not entries:
             self.stats.misses += 1
             return None, "miss"

@@ -280,17 +280,33 @@ class SparseFusedEngine(NamedTuple):
 
 def make_engine(name: str, *, loss: str, P_local: int = 8, K: int = 2,
                 block: int = 128, tile_n: int | None = None,
-                interpret: bool = True):
-    """Engine registry: build a ``RoundEngine`` by name (``ENGINE_NAMES``)."""
+                interpret: bool = True, newton: bool = False):
+    """Engine registry: build a ``RoundEngine`` by name (``ENGINE_NAMES``).
+
+    ``loss`` is a registry string ("lasso" / "logistic") or a full
+    ``kernels.shotgun_block.Loss`` spec — engines carry it as static
+    configuration either way.  ``newton=True`` upgrades a fused engine to
+    the per-block Newton curvature step (DESIGN §12); the two-kernel and
+    scalar engines have no curvature tile, so it is fused-only.
+    """
+    if newton:
+        if name not in ("fused", "sparse_fused"):
+            raise ValueError(
+                f"newton=True requires a fused engine, got {name!r}")
+        from repro.kernels.shotgun_block import resolve_loss
+        loss = resolve_loss(loss)._replace(newton=True)
+    # non-fused engines read the loss through objectives.py, which only
+    # knows registry names
+    lname = loss if isinstance(loss, str) else loss.name
     if name == "scalar":
-        return ScalarEngine(P_local=P_local, loss=loss)
+        return ScalarEngine(P_local=P_local, loss=lname)
     if name == "block":
-        return BlockEngine(K=K, loss=loss, block=block, interpret=interpret)
+        return BlockEngine(K=K, loss=lname, block=block, interpret=interpret)
     if name == "fused":
         return FusedEngine(K=K, loss=loss, block=block, tile_n=tile_n,
                            interpret=interpret)
     if name == "sparse_block":
-        return SparseBlockEngine(K=K, loss=loss, block=block,
+        return SparseBlockEngine(K=K, loss=lname, block=block,
                                  interpret=interpret)
     if name == "sparse_fused":
         return SparseFusedEngine(K=K, loss=loss, interpret=interpret)

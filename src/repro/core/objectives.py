@@ -31,6 +31,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.data.sparse import BlockedCSC, SparseCols
 
@@ -85,6 +86,17 @@ def make_problem(A, y, lam, loss=LASSO, normalize=True) -> Problem:
     if not isinstance(A, BlockedCSC):
         A = jnp.asarray(A, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
+    if loss == LOGISTIC and not isinstance(y, jax.core.Tracer):
+        # Eq. 3 needs y ∈ {−1, +1}: the stable log1p margin form silently
+        # computes nonsense for anything else, so fail at construction
+        # (concrete labels only — a traced y is validated by its producer).
+        labels = np.asarray(y)
+        bad = labels[(labels != 1.0) & (labels != -1.0)]
+        if bad.size:
+            raise ValueError(
+                f"logistic labels must be in {{-1.0, +1.0}}; got "
+                f"{np.unique(bad)[:8].tolist()} "
+                f"({bad.size}/{labels.size} offending values)")
     scales = None
     if normalize:
         A, scales = normalize_columns(A)
@@ -172,7 +184,7 @@ def masked_data_loss(z: jax.Array, y: jax.Array, mask: jax.Array,
     """Data loss restricted to real samples (``mask`` zeros out the rows
     ``kernels.ops.pad_problem`` added).  The Pallas kernels keep their own
     import-independent copy of this formula
-    (``shotgun_block._round_objective``) — keep the two in sync."""
+    (``shotgun_block.Loss.objective``) — keep the two in sync."""
     if loss == LASSO:
         e = z - y
         return 0.5 * jnp.sum(e * (e * mask))

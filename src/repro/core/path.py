@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import objectives as obj
 from repro.core import shotgun
+from repro.core.spec import SolverSpec, reject_legacy_kwargs
 
 
 class PathResult(NamedTuple):
@@ -57,14 +58,19 @@ def _solver_by_name(name: str, **solver_kwargs) -> Callable:
     through (e.g. ``interpret=``, ``engine=``, ``mesh=``).
     """
     solve = shotgun.get_solver(name)
+    # (family, loss) pairs and the frozen *_logreg_fused aliases adapt like
+    # their base family; the loss admission check rides inside ``solve``.
+    family = name[0] if isinstance(name, tuple) else name
+    if family in ("shotgun_logreg_fused", "sparse_logreg_fused"):
+        family = "block_fused"
 
-    if name in ("shooting", "shooting_cdn"):
+    if family in ("shooting", "shooting_cdn"):
         return lambda p, k, P, r, x0: solve(p, k, rounds=r, x0=x0,
                                             **solver_kwargs)
-    if name in ("shotgun", "shotgun_cdn"):
+    if family in ("shotgun", "shotgun_cdn"):
         return lambda p, k, P, r, x0: solve(p, k, P=P, rounds=r, x0=x0,
                                             **solver_kwargs)
-    if name == "shotgun_dup":
+    if family == "shotgun_dup":
         def run_dup(p, k, P, r, x0):
             dp = obj.dup_from(p)
             xhat0 = (None if x0 is None else
@@ -73,16 +79,16 @@ def _solver_by_name(name: str, **solver_kwargs) -> Callable:
             res = solve(dp, k, P=P, rounds=r, xhat0=xhat0, **solver_kwargs)
             return res._replace(x=obj.dup_to_signed(res.x))
         return run_dup
-    if name in ("block", "block_fused"):
+    if family in ("block", "block_fused"):
         def run_block(p, k, P, r, x0):
             from repro.kernels.shotgun_block import BLOCK
             kw = dict(solver_kwargs)
             K = kw.pop("K", max(1, -(-P // BLOCK)))
-            if name == "block_fused" and "rounds_per_launch" not in kw:
+            if family == "block_fused" and "rounds_per_launch" not in kw:
                 kw["rounds_per_launch"] = _largest_divisor_leq(r, 8)
             return solve(p, k, K=K, rounds=r, x0=x0, **kw)
         return run_block
-    if name == "sharded":
+    if family == "sharded":
         def run_sharded(p, k, P, r, x0):
             kw = dict(solver_kwargs)
             if kw.get("engine") in ("block", "fused"):
@@ -96,9 +102,11 @@ def _solver_by_name(name: str, **solver_kwargs) -> Callable:
 
 
 def solve_path(prob: obj.Problem, key: jax.Array, lam_target: float,
-               P: int = 8, rounds_per_lambda: int = 200, num_lambdas: int = 10,
+               P: int | None = None, rounds_per_lambda: int | None = None,
+               num_lambdas: int = 10,
                solver: str | Callable | None = None, validate_p: bool = True,
                cache=None, problem_id=None, tol: float = 1e-4,
+               spec: SolverSpec | None = None,
                **solver_kwargs) -> PathResult:
     """Warm-started lambda-continuation wrapper around any shotgun-family
     solver.
@@ -124,7 +132,25 @@ def solve_path(prob: obj.Problem, key: jax.Array, lam_target: float,
     ``PathResult.rounds`` reports the actual rounds per λ; ``cache=None``
     (the default) keeps the fixed-budget behavior and key schedule
     bit-for-bit.
+
+    ``spec=SolverSpec(...)`` is the canonical interface (DESIGN §12): P =
+    spec.P, rounds_per_lambda = spec.rounds, with ``spec.loss`` validated
+    against ``prob.loss``.  The legacy (P, rounds_per_lambda) kwargs still
+    work but emit a ``DeprecationWarning``.
     """
+    if spec is not None:
+        reject_legacy_kwargs(spec, P=P, rounds_per_lambda=rounds_per_lambda)
+        spec.check_loss(prob.loss)
+        P, rounds_per_lambda = spec.P, spec.rounds
+    else:
+        if P is not None or rounds_per_lambda is not None:
+            import warnings
+            warnings.warn(
+                "solve_path(P=..., rounds_per_lambda=...) kwargs are "
+                "deprecated; pass spec=SolverSpec(...)", DeprecationWarning,
+                stacklevel=2)
+        P = 8 if P is None else P
+        rounds_per_lambda = 200 if rounds_per_lambda is None else rounds_per_lambda
     if validate_p:
         from repro.core import spectral
         ps = spectral.p_star(prob.A)
@@ -165,7 +191,7 @@ def solve_path(prob: obj.Problem, key: jax.Array, lam_target: float,
     rounds_used = []
     for i, lam in enumerate(lams):
         p_i = prob._replace(lam=jnp.float32(lam))
-        x0, kind = cache.get(pid, float(lam))
+        x0, kind = cache.get(pid, float(lam), loss=prob.loss)
         if kind != "miss":
             x = jnp.asarray(x0, dt)      # cache hit beats in-sweep x
         f_prev = float(obj.objective(x, p_i))
@@ -180,7 +206,7 @@ def solve_path(prob: obj.Problem, key: jax.Array, lam_target: float,
             if launch_converged(f_prev, f_chunk, tol):
                 break
             f_prev = float(f_chunk[-1])
-        cache.put(pid, float(lam), np.asarray(x))
+        cache.put(pid, float(lam), np.asarray(x), loss=prob.loss)
         rounds_used.append(spent)
         objs.append(float(res.trace.objective[-1]))
         nnzs.append(int(res.trace.nnz[-1]))

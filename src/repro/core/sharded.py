@@ -56,6 +56,7 @@ unchanged by thinning.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +69,7 @@ from repro.core.engines import ENGINE_NAMES, ScalarEngine, make_engine
 from repro.core.health import GuardConfig
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
+from repro.core.spec import SolverSpec, reject_legacy_kwargs
 from repro.data.sparse import BlockedCSC, pad_feature_blocks
 
 MERGE_MODES = ("round", "launch")
@@ -332,8 +334,10 @@ def _sharded_solve(A, y, lam, beta, key, P_local: int, rounds: int,
                          trace_every=trace_every)
 
 
-def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
-                          rounds: int = 500, mesh: Mesh | None = None,
+def shotgun_sharded_solve(prob: Problem, key: jax.Array,
+                          P_local: int | None = None,
+                          rounds: int | None = None,
+                          mesh: Mesh | None = None,
                           trace_every: int = 1, *, engine: str = "scalar",
                           merge: str = "round", rounds_per_launch: int = 8,
                           K: int = 2, tile_n: int | None = None,
@@ -346,7 +350,9 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
                           faults=None,
                           ckpt_dir=None, ckpt_every: int = 0,
                           fail_at_merge: int | None = None,
-                          resume: bool = False) -> Result:
+                          resume: bool = False,
+                          newton: bool = False,
+                          spec: SolverSpec | None = None) -> Result:
     """Distributed Shotgun over any round engine (DESIGN §3).
 
     engine      "scalar" (P = P_local × shards coordinate updates/round),
@@ -392,7 +398,29 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
                 switch).
 
     The trace has one (objective, nnz) point per ``trace_every`` merges.
+
+    ``spec=SolverSpec(...)`` is the canonical solve description (DESIGN
+    §12): P_local = spec.P, plus rounds / merge / pipeline / guard /
+    newton; ``spec.loss`` is validated against ``prob.loss``.  ``engine``
+    stays an explicit kwarg (it names a kernel, not a solve).  The legacy
+    (P_local, rounds) kwargs still work through this shim but emit a
+    ``DeprecationWarning``.  ``newton=True`` (or ``spec.newton``) requires
+    a fused engine (per-block curvature tile, DESIGN §12).
     """
+    if spec is not None:
+        reject_legacy_kwargs(spec, P_local=P_local, rounds=rounds)
+        spec.check_loss(prob.loss)
+        P_local, rounds = spec.P, spec.rounds
+        merge, pipeline = spec.merge, spec.pipeline
+        guard, newton = spec.guard, spec.newton
+    else:
+        if P_local is not None or rounds is not None:
+            warnings.warn(
+                "shotgun_sharded_solve(P_local=..., rounds=...) kwargs are "
+                "deprecated; pass spec=SolverSpec(...)", DeprecationWarning,
+                stacklevel=2)
+        P_local = 8 if P_local is None else P_local
+        rounds = 500 if rounds is None else rounds
     if engine not in ENGINE_NAMES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINE_NAMES}")
     if merge not in MERGE_MODES:
@@ -418,7 +446,7 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
                 f"(nblk={A.nblk}, shards={nshards})")
         y, mask = prob.y, jnp.ones(prob.n, jnp.float32)
         eng = make_engine(engine, loss=prob.loss, K=K, block=A.block,
-                          interpret=interpret)
+                          interpret=interpret, newton=newton)
     elif isinstance(prob.A, BlockedCSC):
         raise ValueError(
             f"engine={engine!r} needs a dense design; BlockedCSC problems "
@@ -426,7 +454,8 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
     elif engine == "scalar":
         A, y = pad_features(prob.A, nshards), prob.y
         mask = jnp.ones(prob.n, jnp.float32)
-        eng = make_engine(engine, loss=prob.loss, P_local=P_local)
+        eng = make_engine(engine, loss=prob.loss, P_local=P_local,
+                          newton=newton)
     else:
         from repro.kernels import ops
         from repro.kernels.shotgun_block import BLOCK, auto_tile_n
@@ -442,7 +471,7 @@ def shotgun_sharded_solve(prob: Problem, key: jax.Array, P_local: int = 8,
             tile_n = auto_tile_n(A.shape[0], BLOCK, d=d_local)
         mask = mask.astype(jnp.float32)
         eng = make_engine(engine, loss=prob.loss, K=K, block=BLOCK,
-                          tile_n=tile_n, interpret=interpret)
+                          tile_n=tile_n, interpret=interpret, newton=newton)
 
     d_full = A.d_pad if isinstance(A, BlockedCSC) else A.shape[1]
     x0 = (jnp.zeros(d_full, jnp.float32) if x0 is None

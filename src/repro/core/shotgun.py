@@ -20,6 +20,7 @@ is O(n·P) instead of O(n·d).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -29,6 +30,7 @@ from repro.core import health
 from repro.core import objectives as obj
 from repro.core.health import GuardConfig
 from repro.core.objectives import Problem, DupProblem
+from repro.core.spec import SolverSpec, reject_legacy_kwargs
 
 
 class Trace(NamedTuple):
@@ -51,12 +53,18 @@ def _sample(key, d, P, replace: bool):
     return jax.random.choice(key, d, (P,), replace=False)
 
 
-@functools.partial(jax.jit, static_argnames=("P", "rounds", "replace",
-                                             "guard"))
-def shotgun_solve(prob: Problem, key: jax.Array, P: int, rounds: int,
+def shotgun_solve(prob: Problem, key: jax.Array, P: int | None = None,
+                  rounds: int | None = None,
                   x0: jax.Array | None = None, replace: bool = True,
-                  guard: GuardConfig | None = None) -> Result:
+                  guard: GuardConfig | None = None,
+                  spec: SolverSpec | None = None) -> Result:
     """Run `rounds` synchronous Shotgun rounds of P parallel updates each.
+
+    ``spec=SolverSpec(...)`` is the canonical interface (DESIGN §12): P /
+    rounds / guard come from the spec and ``spec.loss`` is validated
+    against ``prob.loss``.  The legacy (P, rounds, ...) kwargs still work
+    through this shim (same jitted core, bit-for-bit) but emit a
+    ``DeprecationWarning``.
 
     ``prob.A`` may be dense or a ``BlockedCSC`` container: the round is
     written against the ``gather_cols`` / ``cols_rmatvec`` /
@@ -71,6 +79,25 @@ def shotgun_solve(prob: Problem, key: jax.Array, P: int, rounds: int,
     ``guard=None`` (default) is the original unguarded path, trajectory
     unchanged.
     """
+    if spec is not None:
+        reject_legacy_kwargs(spec, P=P, rounds=rounds)
+        spec.check_loss(prob.loss)
+        P, rounds, guard = spec.P, spec.rounds, spec.guard
+    else:
+        if P is None or rounds is None:
+            raise TypeError("shotgun_solve needs (P, rounds) or spec=")
+        warnings.warn(
+            "shotgun_solve(P=..., rounds=...) kwargs are deprecated; pass "
+            "spec=SolverSpec(...)", DeprecationWarning, stacklevel=2)
+    return _shotgun_solve_core(prob, key, P, rounds, x0=x0, replace=replace,
+                               guard=guard)
+
+
+@functools.partial(jax.jit, static_argnames=("P", "rounds", "replace",
+                                             "guard"))
+def _shotgun_solve_core(prob: Problem, key: jax.Array, P: int, rounds: int,
+                        x0: jax.Array | None = None, replace: bool = True,
+                        guard: GuardConfig | None = None) -> Result:
     A, y, lam, beta = prob.A, prob.y, prob.lam, prob.beta
     d = A.shape[1]
     x0 = jnp.zeros(d, A.dtype) if x0 is None else x0
@@ -121,7 +148,7 @@ def shotgun_solve(prob: Problem, key: jax.Array, P: int, rounds: int,
 def shooting_solve(prob: Problem, key: jax.Array, rounds: int,
                    x0: jax.Array | None = None) -> Result:
     """Alg. 1: sequential SCD = Shotgun with P = 1."""
-    return shotgun_solve(prob, key, P=1, rounds=rounds, x0=x0)
+    return _shotgun_solve_core(prob, key, P=1, rounds=rounds, x0=x0)
 
 
 # ---------------------------------------------------------------------------
@@ -175,10 +202,31 @@ def shotgun_dup_solve(dp: DupProblem, key: jax.Array, P: int, rounds: int,
 # ---------------------------------------------------------------------------
 
 SOLVER_NAMES = ("shooting", "shotgun", "shotgun_dup", "shotgun_cdn",
-                "shooting_cdn", "block", "block_fused", "sharded")
+                "shooting_cdn", "block", "block_fused", "sharded",
+                "shotgun_logreg_fused", "sparse_logreg_fused")
 
 
-def get_solver(name: str):
+def _loss_bound(fn, loss: str, family, require_sparse: bool = False):
+    """Wrap a solver so it refuses problems built for a different loss
+    (naming both, serve-layer convention) — and, for the sparse-only
+    entries, refuses dense designs."""
+    @functools.wraps(fn)
+    def solve(prob, *args, **kwargs):
+        if prob.loss != loss:
+            raise ValueError(
+                f"solver {family!r} is bound to loss {loss!r} but the "
+                f"problem carries loss {prob.loss!r}")
+        if require_sparse:
+            from repro.data.sparse import BlockedCSC
+            if not isinstance(prob.A, BlockedCSC):
+                raise ValueError(
+                    f"solver {family!r} needs a BlockedCSC design; got "
+                    f"{type(prob.A).__name__}")
+        return fn(prob, *args, **kwargs)
+    return solve
+
+
+def get_solver(name):
     """Uniform entry point over every Shotgun-family solver.
 
     Returns the solve callable for ``name`` (see ``SOLVER_NAMES``):
@@ -191,12 +239,36 @@ def get_solver(name: str):
                                          (pick the per-shard kernel with
                                          ``engine=`` from ``ENGINE_NAMES``,
                                          DESIGN §3)
+      shotgun_logreg_fused               fused kernel bound to logistic loss
+      sparse_logreg_fused                same, BlockedCSC designs only
+
+    **Migration note (DESIGN §12):** ``name`` may also be a
+    ``(family, loss)`` pair — e.g. ``("block_fused", "logistic")`` — which
+    binds any family above to a loss with an admission check (a problem
+    carrying a different loss raises ``ValueError`` naming both).  This is
+    the forward-compatible spelling: ``SOLVER_NAMES`` stops growing one
+    string per (family, loss) cross-product, and the two ``*_logreg_fused``
+    strings are frozen aliases of ``("block_fused", "logistic")`` kept for
+    existing configs.
 
     Kernel/sharded solvers are imported lazily: ``repro.kernels.ops`` and
     ``repro.core.sharded`` both import this module at load time.
     ``core.path.solve_path(solver=<name>)`` adapts any entry to the
     λ-continuation loop, warm starts included.
     """
+    if isinstance(name, tuple):
+        family, loss = name
+        if loss not in obj.BETA:
+            raise ValueError(
+                f"unknown loss {loss!r}; choose from {tuple(obj.BETA)}")
+        return _loss_bound(get_solver(family), loss, family)
+    if name == "shotgun_logreg_fused":
+        from repro.kernels import ops
+        return _loss_bound(ops.fused_block_shotgun_solve, obj.LOGISTIC, name)
+    if name == "sparse_logreg_fused":
+        from repro.kernels import ops
+        return _loss_bound(ops.fused_block_shotgun_solve, obj.LOGISTIC, name,
+                           require_sparse=True)
     if name == "shooting":
         return shooting_solve
     if name == "shotgun":

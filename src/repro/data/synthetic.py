@@ -90,16 +90,24 @@ def large_sparse(seed=0, n=2048, d=16384, density=0.002, nnz_frac=0.005,
     return _maybe_bcsc(A, layout), y, x
 
 
-def logistic_data(seed=0, n=4096, d=512, nnz_frac=0.05, flip=0.02):
-    """Labels in {-1,+1} from a sparse linear teacher (zeta/rcv1 regimes)."""
+def logistic_data(seed=0, n=4096, d=512, nnz_frac=0.05, flip=0.02,
+                  density=1.0, layout="dense"):
+    """Labels in {-1,+1} from a sparse linear teacher (zeta/rcv1 regimes).
+
+    ``density < 1`` sparsifies the design (rcv1-like bag-of-words rows);
+    ``layout='bcsc'`` packs it as a BlockedCSC container, same draws as
+    the dense layout for the same seed (DESIGN §8).
+    """
     rng = np.random.default_rng(seed)
     A = rng.standard_normal((n, d)).astype(np.float32)
+    if density < 1.0:
+        A = A * (rng.random((n, d)) < density)
     x = _sparse_signal(rng, d, nnz_frac)
     p = 1.0 / (1.0 + np.exp(-(A @ x)))
     y = np.where(rng.random(n) < p, 1.0, -1.0).astype(np.float32)
     flips = rng.random(n) < flip
     y = np.where(flips, -y, y)
-    return A, y, x
+    return _maybe_bcsc(A, layout), y, x
 
 
 CATEGORIES = {

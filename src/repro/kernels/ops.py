@@ -23,7 +23,9 @@ both modes, so all four trajectories coincide.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +35,11 @@ from repro.core import objectives as obj
 from repro.core.health import GuardConfig
 from repro.core.objectives import Problem
 from repro.core.shotgun import Result, Trace
+from repro.core.spec import SolverSpec, reject_legacy_kwargs
 from repro.data.sparse import BlockedCSC, bcsc_matvec
 from repro.kernels.shotgun_block import (BLOCK, TILE_N, auto_tile_n,
                                          fused_shotgun_rounds,
-                                         gather_block_matvec,
+                                         gather_block_matvec, resolve_loss,
                                          scatter_block_update)
 from repro.kernels.shotgun_sparse import (block_delta,
                                           fused_sparse_shotgun_rounds,
@@ -149,6 +152,9 @@ def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
     n, d = A.shape
     nblk = d // block
     L = rounds // R
+    # ``loss`` may be a registry string or a full Loss spec (e.g. a Newton
+    # variant); objectives.py only knows the name.
+    lname = loss if isinstance(loss, str) else loss.name
     x0 = (jnp.zeros(d, jnp.float32) if x0 is None
           else x0.astype(jnp.float32))
     # warm-start margin in f32 even for bf16-stored A (cast before the
@@ -191,7 +197,8 @@ def _fused_solve(A, y, mask, lam, beta, key, K, rounds, R, block, tile_n,
         nnzs = jnp.where(bad, jnp.full_like(nnzs, jnp.sum(x != 0)), nnzs)
         return (x, z, gs), (fs, nnzs)
 
-    f0 = obj.masked_data_loss(z0, y, mask, loss) + lam * jnp.sum(jnp.abs(x0))
+    f0 = (obj.masked_data_loss(z0, y, mask, lname)
+          + lam * jnp.sum(jnp.abs(x0)))
     gs0 = health.init_guard_state(x0, z0, f0, K)
     (x, z, gs), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0, gs0), keys)
     fs = fs.reshape(rounds)
@@ -294,6 +301,7 @@ def _fused_sparse_solve(rows, vals, y, lam, beta, key, K, rounds, R, loss,
     nblk, tile, block = rows.shape
     n = y.shape[0]
     L = rounds // R
+    lname = loss if isinstance(loss, str) else loss.name
     mask = jnp.ones(n, jnp.float32)
     x0 = (jnp.zeros(nblk * block, jnp.float32) if x0 is None
           else x0.astype(jnp.float32))
@@ -333,7 +341,8 @@ def _fused_sparse_solve(rows, vals, y, lam, beta, key, K, rounds, R, loss,
         nnzs = jnp.where(bad, jnp.full_like(nnzs, jnp.sum(x != 0)), nnzs)
         return (x, z, gs), (fs, nnzs)
 
-    f0 = obj.masked_data_loss(z0, y, mask, loss) + lam * jnp.sum(jnp.abs(x0))
+    f0 = (obj.masked_data_loss(z0, y, mask, lname)
+          + lam * jnp.sum(jnp.abs(x0)))
     gs0 = health.init_guard_state(x0, z0, f0, K)
     (x, z, gs), (fs, nnzs) = jax.lax.scan(launch_fn, (x0, z0, gs0), keys)
     fs = fs.reshape(rounds)
@@ -342,12 +351,15 @@ def _fused_sparse_solve(rows, vals, y, lam, beta, key, K, rounds, R, loss,
                   status=health.status_from_trace(fs, gs.backoffs))
 
 
-def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
+def block_shotgun_solve(prob: Problem, key: jax.Array,
+                        K: int | None = None, rounds: int | None = None,
                         block: int = BLOCK, interpret: bool = True,
                         fused: bool = False, rounds_per_launch: int = 8,
                         tile_n: int | None = None,
                         x0: jax.Array | None = None,
-                        guard: GuardConfig | None = None) -> Result:
+                        guard: GuardConfig | None = None,
+                        newton: bool = False,
+                        spec: SolverSpec | None = None) -> Result:
     """TPU-native Shotgun: K parallel blocks of `block` coordinates/round.
 
     Effective parallelism P = K * block must respect Thm 3.2's
@@ -373,7 +385,34 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
     — one launch per ``rounds_per_launch`` rounds with the margin resident
     in VMEM and nnz tiles as the only per-round A traffic; ``tile_n`` is
     ignored (the sparse kernels never tile the sample dimension).
+
+    ``spec=SolverSpec(...)`` is the canonical interface (DESIGN §12): K is
+    derived as ceil(spec.P / block) and ``fused``/``guard``/``newton`` come
+    from the spec.  The legacy (K, rounds, ...) kwargs still work through
+    this shim (same jitted core, bit-for-bit) but emit a
+    ``DeprecationWarning``.  ``newton=True`` (or ``spec.newton``) swaps the
+    β-Lipschitz step for the per-block Newton curvature computed from the
+    already-fetched A tile — fused path only.
     """
+    if spec is not None:
+        reject_legacy_kwargs(spec, K=K, rounds=rounds)
+        spec.check_loss(prob.loss)
+        K = max(1, -(-spec.P // block))
+        rounds = spec.rounds
+        fused, guard, newton = spec.fused, spec.guard, spec.newton
+    else:
+        if K is None or rounds is None:
+            raise TypeError("block_shotgun_solve needs (K, rounds) or spec=")
+        warnings.warn(
+            "block_shotgun_solve(K=..., rounds=...) kwargs are deprecated; "
+            "pass spec=SolverSpec(...)", DeprecationWarning, stacklevel=2)
+    loss = prob.loss
+    if newton:
+        if not fused:
+            raise ValueError(
+                "newton=True requires fused=True: the per-block curvature "
+                "tile is computed inside the fused kernel body")
+        loss = resolve_loss(prob.loss)._replace(newton=True)
     if isinstance(prob.A, BlockedCSC):
         if block != prob.A.block:
             raise ValueError(f"block={block} != BlockedCSC block "
@@ -387,11 +426,11 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
                     f"rounds_per_launch={rounds_per_launch}")
             res = _fused_sparse_solve(prob.A.rows, prob.A.vals, prob.y,
                                       prob.lam, prob.beta, key, K, rounds,
-                                      rounds_per_launch, prob.loss,
+                                      rounds_per_launch, loss,
                                       interpret, x0=x0, guard=guard)
         else:
             res = _sparse_solve(prob.A.rows, prob.A.vals, prob.y, prob.lam,
-                                prob.beta, key, K, rounds, prob.loss,
+                                prob.beta, key, K, rounds, loss,
                                 interpret, x0=x0, guard=guard)
         return Result(x=res.x[: prob.d], z=res.z, trace=res.trace,
                       status=res.status)
@@ -408,22 +447,38 @@ def block_shotgun_solve(prob: Problem, key: jax.Array, K: int, rounds: int,
             tile_n = auto_tile_n(A.shape[0], block, d=A.shape[1])
         res = _fused_solve(A, y, mask.astype(jnp.float32), prob.lam,
                            prob.beta, key, K, rounds, rounds_per_launch,
-                           block, tile_n, prob.loss, interpret, x0=x0,
+                           block, tile_n, loss, interpret, x0=x0,
                            guard=guard)
     else:
         res = _solve(A, y, mask, prob.lam, prob.beta, key, K, rounds, block,
-                     prob.loss, interpret, x0=x0, guard=guard)
+                     loss, interpret, x0=x0, guard=guard)
     return Result(x=res.x[: prob.d], z=res.z[: prob.n], trace=res.trace,
                   status=res.status)
 
 
-def fused_block_shotgun_solve(prob: Problem, key: jax.Array, K: int,
-                              rounds: int, rounds_per_launch: int = 8,
+def fused_block_shotgun_solve(prob: Problem, key: jax.Array,
+                              K: int | None = None,
+                              rounds: int | None = None,
+                              rounds_per_launch: int = 8,
                               block: int = BLOCK, tile_n: int | None = None,
                               interpret: bool = True,
                               x0: jax.Array | None = None,
-                              guard: GuardConfig | None = None) -> Result:
-    """Convenience alias: ``block_shotgun_solve(..., fused=True)``."""
+                              guard: GuardConfig | None = None,
+                              spec: SolverSpec | None = None) -> Result:
+    """Convenience alias: ``block_shotgun_solve(..., fused=True)``.
+
+    Accepts ``spec=SolverSpec(...)`` like every entry point (DESIGN §12);
+    the alias pins the fused path, so a spec left at ``fused=False`` is
+    promoted to ``fused=True`` (``newton`` passes through unchanged).
+    """
+    if spec is not None:
+        reject_legacy_kwargs(spec, K=K, rounds=rounds, guard=guard)
+        if not spec.fused:
+            spec = dataclasses.replace(spec, fused=True)
+        return block_shotgun_solve(prob, key, block=block,
+                                   interpret=interpret,
+                                   rounds_per_launch=rounds_per_launch,
+                                   tile_n=tile_n, x0=x0, spec=spec)
     return block_shotgun_solve(prob, key, K, rounds, block=block,
                                interpret=interpret, fused=True,
                                rounds_per_launch=rounds_per_launch,

@@ -36,6 +36,7 @@ fused kernel is in DESIGN §4.3.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -162,24 +163,110 @@ def _soft_threshold(v, t):
     return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
 
 
-def _residual(z, y, m, loss: str):
-    """dL/dz masked to real samples; matches objectives.residual_like."""
-    if loss == LASSO:
-        return (z - y) * m
-    return (-y * jax.nn.sigmoid(-y * z)) * m
+def _stable_logistic_tile(z, y):
+    """The blessed stable-logistic tile (DESIGN §12, shotgun-lint SL004):
+    the ONE place raw ``jnp.exp``/``jnp.log*`` may appear in kernel bodies.
+
+    Works on the VMEM-resident margin tile in f32: with m = −y·z,
+
+      sig = σ(m) = σ(−y·z)        |residual| factor (r = −y·sig)
+      ll  = log(1 + exp(m))       per-sample loss, the max+log1p form of
+                                  logaddexp(0, m) — exp only sees
+                                  non-positive arguments
+      w   = σ(z)(1 − σ(z))        diagonal-Hessian weight; equals
+                                  sig·(1 − sig) because y ∈ {−1, +1} makes
+                                  {σ(yz), σ(−yz)} = {σ(z), σ(−z)}
+
+    Everything stays f32 through the exp/log1p — the tile is consumed by
+    f32 accumulators (dot_general with preferred_element_type=f32)."""
+    m = -y * z
+    sig = jax.nn.sigmoid(m)
+    ll = jnp.maximum(m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m)))
+    w = sig * (1.0 - sig)
+    return sig, ll, w
 
 
-def _round_objective(z, y, m, x, lam, loss: str):
-    """F(x) from the VMEM-resident margin/iterate; matches ops._solve."""
-    if loss == LASSO:
-        e = z - y
-        data = 0.5 * jnp.sum(e * (e * m))
-    else:
-        data = jnp.sum(m * jnp.logaddexp(0.0, -y * z))
-    return data + lam * jnp.sum(jnp.abs(x))
+class Loss(NamedTuple):
+    """Static loss spec for the fused kernels (the loss seam, DESIGN §12).
+
+    A ``Loss`` is everything the fused round body needs to know about the
+    data term, as a hashable NamedTuple that rides ``jax.jit`` /
+    ``pallas_call`` as static configuration:
+
+      ``residual(z, y, m)``            dL/dz on the VMEM margin tile
+      ``curvature_weights(z, y, m)``   per-sample diagonal-Hessian weights
+                                       w_i with h_j = Σ_i a_ij² w_i — what
+                                       the per-block Newton option
+                                       accumulates from the already-fetched
+                                       A tile (Bian et al. 2013)
+      ``data_loss(z, y, m)``           the masked data term for the
+                                       in-kernel objective trace
+      ``beta``                         the Assumption-2.1 curvature bound
+                                       (1 squared, 1/4 logistic per Eq. 6)
+                                       used when ``newton`` is off
+      ``newton``                       True → the delta divides by the
+                                       accumulated per-block curvature
+                                       (floored at 1e-8) instead of beta
+
+    Kernel entry points accept either a registry string (``"lasso"`` /
+    ``"logistic"`` / ``"logistic_newton"``) or a ``Loss`` instance — see
+    ``resolve_loss``.  Kept import-independent of ``repro.core``."""
+
+    name: str
+    beta: float
+    newton: bool = False
+
+    def residual(self, z, y, m):
+        """dL/dz masked to real samples; matches objectives.residual_like."""
+        if self.name == LASSO:
+            return (z - y) * m
+        sig, _, _ = _stable_logistic_tile(z, y)
+        return (-y * sig) * m
+
+    def curvature_weights(self, z, y, m):
+        """Per-sample w_i such that h_j = Σ_i a_ij² w_i is the diagonal
+        second derivative of the data term (exact for both losses: L'' = 1
+        squared, σ(z)(1−σ(z)) logistic)."""
+        if self.name == LASSO:
+            return m
+        _, _, w = _stable_logistic_tile(z, y)
+        return w * m
+
+    def data_loss(self, z, y, m):
+        """Masked data term; matches objectives.masked_data_loss."""
+        if self.name == LASSO:
+            e = z - y
+            return 0.5 * jnp.sum(e * (e * m))
+        _, ll, _ = _stable_logistic_tile(z, y)
+        return jnp.sum(m * ll)
+
+    def objective(self, z, y, m, x, lam):
+        """F(x) from the VMEM-resident margin/iterate; matches ops._solve."""
+        return self.data_loss(z, y, m) + lam * jnp.sum(jnp.abs(x))
 
 
-def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
+SQUARED_LOSS = Loss(LASSO, beta=1.0)
+LOGISTIC_LOSS = Loss(LOGISTIC, beta=0.25)                  # Eq. 6
+LOGISTIC_NEWTON = Loss(LOGISTIC, beta=0.25, newton=True)   # Bian et al.
+
+LOSSES = {"lasso": SQUARED_LOSS, "logistic": LOGISTIC_LOSS,
+          "logistic_newton": LOGISTIC_NEWTON}
+
+
+def resolve_loss(loss) -> Loss:
+    """Map a registry string (or a ``Loss``, returned unchanged) to the
+    static ``Loss`` spec the kernel factories consume."""
+    if isinstance(loss, Loss):
+        return loss
+    try:
+        return LOSSES[loss]
+    except KeyError:
+        raise ValueError(
+            f"unknown loss {loss!r}; choose from {sorted(LOSSES)} or pass a "
+            f"Loss instance") from None
+
+
+def _make_fused_kernel(loss: Loss, R: int, K: int, T: int, block: int,
                        tile_n: int, emit_dz: bool = False):
     """Kernel body factory.  grid = (R, K) when T == 1 (single-phase: each A
     block fetched once per round), else (R, K, 2, T) (gather phase p=0,
@@ -200,11 +287,21 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
     health output that goes 1.0 the first round the objective crosses the
     guard or goes non-finite (engine variant: the margin view goes
     non-finite), so the caller detects an in-launch divergence from one
-    scalar instead of scanning the trace."""
+    scalar instead of scanning the trace.
+
+    Per-block Newton (``loss.newton``, DESIGN §12): the round start also
+    snapshots the per-sample curvature weights w = L''(z) into a (n, 1)
+    scratch, and the gather phase accumulates the per-block diagonal
+    curvature h_B = A_B²ᵀ w from the SAME already-fetched A tile (one extra
+    dot_general, zero extra HBM traffic); the delta then divides by
+    max(h, 1e-8) instead of the global beta bound."""
     single = T == 1
+    newton = loss.newton
 
     def kernel(idx_ref, scal_ref, a_ref, z0_ref, x0_ref, y_ref, m_ref,
                *refs):
+        if newton:
+            refs, (w_s, c_s) = refs[:-2], refs[-2:]
         if emit_dz:
             (dzo_ref, xo_ref, h_ref, z_s, dz_s, r_s, x_s, g_s, d_s) = refs
         else:
@@ -238,7 +335,13 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
 
         @pl.when((k_id == 0) & gather_on & (t_id == 0))
         def _round_start():
-            r_s[...] = _residual(z_s[...], y_ref[...], m_ref[...], loss)
+            r_s[...] = loss.residual(z_s[...], y_ref[...], m_ref[...])
+            if newton:
+                # Curvature weights from the SAME round-start margin the
+                # residual uses — all K blocks see pre-round curvature,
+                # preserving Alg. 2's multiset semantics.
+                w_s[...] = loss.curvature_weights(z_s[...], y_ref[...],
+                                                  m_ref[...])
 
         a = a_ref[...].astype(jnp.float32)          # (tile_n, block)
 
@@ -247,12 +350,23 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
             @pl.when(t_id == 0)
             def _zero_g():
                 g_s[pl.ds(k_id, 1), :] = jnp.zeros((1, block), jnp.float32)
+                if newton:
+                    c_s[pl.ds(k_id, 1), :] = jnp.zeros((1, block),
+                                                       jnp.float32)
 
             rt = r_s[pl.ds(t_id * tile_n, tile_n), :]   # (tile_n, 1)
             contrib = jax.lax.dot_general(
                 a, rt, (((0,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)      # (block, 1)
             g_s[pl.ds(k_id, 1), :] += contrib.reshape(1, block)
+            if newton:
+                # h_B += (a∘a)ᵀ w from the tile already in VMEM: the Newton
+                # curvature costs one extra dot_general, no extra A bytes.
+                wt = w_s[pl.ds(t_id * tile_n, tile_n), :]
+                hc = jax.lax.dot_general(
+                    a * a, wt, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)  # (block, 1)
+                c_s[pl.ds(k_id, 1), :] += hc.reshape(1, block)
 
             @pl.when(t_id == T - 1)
             def _delta():
@@ -262,7 +376,14 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
                 b = idx_ref[r_id, k_id]
                 x_sel = x_s[pl.ds(b, 1), :]
                 g = g_s[pl.ds(k_id, 1), :]
-                x_new = _soft_threshold(x_sel - g / beta, lam / beta)
+                if newton:
+                    # Per-block Newton: divide by the accumulated diagonal
+                    # curvature, floored (zero/padded columns fall back to a
+                    # tiny h whose threshold λ/h kills the step anyway).
+                    h = jnp.maximum(c_s[pl.ds(k_id, 1), :], 1e-8)
+                else:
+                    h = beta
+                x_new = _soft_threshold(x_sel - g / h, lam / h)
                 # Backoff mask: blocks at or past k_eff contribute nothing
                 # this round (multiply by exactly 1.0 when k_eff == K).
                 live = jnp.where(k_id < k_eff, 1.0, 0.0).astype(jnp.float32)
@@ -297,8 +418,8 @@ def _make_fused_kernel(loss: str, R: int, K: int, T: int, block: int,
                     h_ref[0, 0] = jnp.maximum(
                         h_ref[0, 0], jnp.where(ok, 0.0, 1.0))
                 else:
-                    f = _round_objective(z_s[...], y_ref[...], m_ref[...],
-                                         x_s[...], lam, loss)
+                    f = loss.objective(z_s[...], y_ref[...], m_ref[...],
+                                       x_s[...], lam)
                     f_ref[0, 0] = f
                     bad = ~jnp.isfinite(f) | (f > guard)
                     h_ref[0, 0] = jnp.maximum(
@@ -317,6 +438,7 @@ def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
     ``k_eff`` (dynamic scalar, defaults to K) and ``guard_f`` (objective
     guard level, defaults to +inf = never trips) ride in the scalar-prefetch
     vector so a backoff changes no shapes and triggers no recompilation."""
+    loss = resolve_loss(loss)
     n, d = A.shape
     R, K = blk_idx.shape
     if tile_n is None:
@@ -395,7 +517,10 @@ def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
             pltpu.VMEM((nblk, block), jnp.float32),  # x
             pltpu.VMEM((K, block), jnp.float32),    # g  accumulators
             pltpu.VMEM((K, block), jnp.float32),    # delta
-        ],
+        ] + ([
+            pltpu.VMEM((n, 1), jnp.float32),        # w  curvature weights
+            pltpu.VMEM((K, block), jnp.float32),    # h  curvature accumulators
+        ] if loss.newton else []),
     )
     return pl.pallas_call(
         _make_fused_kernel(loss, R, K, T, block, tile_n, emit_dz=emit_dz),
@@ -408,7 +533,7 @@ def _fused_call(A, z, x, blk_idx, lam, beta, y, mask, loss, block, tile_n,
 @functools.partial(jax.jit,
                    static_argnames=("loss", "block", "tile_n", "interpret"))
 def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
-                         loss: str = LASSO, block: int = BLOCK,
+                         loss: str | Loss = LASSO, block: int = BLOCK,
                          tile_n: int | None = None, interpret: bool = False,
                          k_eff=None, guard_f=None):
     """R Block-Shotgun rounds in ONE pallas_call.
@@ -419,6 +544,9 @@ def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
              mask from ``ops.pad_problem``.
     blk_idx  (R, K) int32 — round t updates aligned coordinate blocks
              blk_idx[t, 0..K-1] (duplicates allowed, multiset semantics).
+    loss     registry string (``"lasso"`` / ``"logistic"`` /
+             ``"logistic_newton"``) or a ``Loss`` spec — the static loss
+             seam (DESIGN §12); ``beta`` is ignored by Newton specs.
     k_eff    dynamic effective block count (DESIGN §9): blocks k >= k_eff
              are drawn but masked out — the adaptive-P backoff knob.  None
              (default) means all K live, bit-exactly.
@@ -442,7 +570,7 @@ def fused_shotgun_rounds(A, z, x, blk_idx, lam, beta, y, mask,
 @functools.partial(jax.jit,
                    static_argnames=("loss", "block", "tile_n", "interpret"))
 def fused_shotgun_delta_rounds(A, z, x, blk_idx, lam, beta, y, mask,
-                               loss: str = LASSO, block: int = BLOCK,
+                               loss: str | Loss = LASSO, block: int = BLOCK,
                                tile_n: int | None = None,
                                interpret: bool = False, k_eff=None):
     """Shard-local fused engine kernel: R rounds against a margin *snapshot*.
@@ -477,7 +605,8 @@ VMEM_BUDGET = 16 * 2 ** 20
 
 def fused_vmem_bytes(n: int, d: int, K: int, block: int = BLOCK,
                      tile_n: int | None = None, emit_dz: bool = False,
-                     a_bytes: int = 4, slots: int = 1) -> int:
+                     a_bytes: int = 4, slots: int = 1,
+                     loss: str | Loss = "lasso") -> int:
     """f32 VMEM resident set of the dense fused kernel — the twin of
     ``shotgun_sparse.fused_sparse_vmem_bytes`` for ``_fused_call``'s
     buffers: the z0/y/mask in-vectors, z/r scratch (+ Δz scratch and out
@@ -489,6 +618,11 @@ def fused_vmem_bytes(n: int, d: int, K: int, block: int = BLOCK,
     the (R, K) scalar-prefetch index matrix and the (R, 1) trace outputs
     scale with R, both negligible.
 
+    ``loss`` (string or ``Loss`` spec) prices the logistic kernel twins:
+    a Newton spec adds the (n, 1) curvature-weight scratch and the
+    (K, block) per-block curvature accumulator (DESIGN §12); the
+    gradient-form logistic kernel has the same resident set as lasso.
+
     ``slots`` is the batched-launch multiplier (DESIGN §11): the vmapped
     entry points (``kernels/batched.py``) stack S independent problems on
     a leading axis, so the stacked-slot resident set is modeled as
@@ -497,10 +631,13 @@ def fused_vmem_bytes(n: int, d: int, K: int, block: int = BLOCK,
     interpret mode, where vmap physically batches every buffer."""
     if tile_n is None:
         tile_n = auto_tile_n(n, block, d=d)
-    # z0/y/mask in + z/r scratch + z-out, or +dz scratch/out - z-out
-    vecs = (7 if emit_dz else 6) * n * 4
+    newton = resolve_loss(loss).newton
+    # z0/y/mask in + z/r scratch + z-out, or +dz scratch/out - z-out;
+    # Newton adds the (n, 1) curvature-weight scratch
+    vecs = ((7 if emit_dz else 6) + (1 if newton else 0)) * n * 4
     xbuf = 3 * d * 4                               # x0, x scratch, x out
-    kbuf = 2 * K * block * 4                       # g, delta
+    # g, delta (+ Newton per-block curvature accumulator)
+    kbuf = (3 if newton else 2) * K * block * 4
     tiles = 2 * tile_n * block * a_bytes           # double-buffered A tile
     return slots * (vecs + xbuf + kbuf + tiles)
 

@@ -50,8 +50,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.shotgun_block import (BLOCK, LASSO, _residual,
-                                         _round_objective, _soft_threshold)
+from repro.kernels.shotgun_block import (BLOCK, LASSO, Loss, _soft_threshold,
+                                         resolve_loss)
 
 
 # ---------------------------------------------------------------------------
@@ -187,7 +187,7 @@ def sparse_scatter_block_update(rows, vals, z, blk_idx, delta,
 # traffic (DESIGN §8.3).
 # ---------------------------------------------------------------------------
 
-def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
+def _make_fused_sparse_kernel(loss: Loss, K: int, emit_dz: bool = False):
     """Kernel body factory.  grid = (R, K): one selected column block per
     step, every round "single-phase" — the step's (tile, block) rows/vals
     tiles serve both the gradient gather and the margin scatter, so each
@@ -204,10 +204,20 @@ def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
     scalar-prefetch vector carries ``k_eff`` (blocks past it have their
     delta masked to zero; exactly 1.0 at k_eff == K) and a guard objective
     level, and a (1, 1) max-accumulated health output trips on a
-    guard-crossing / non-finite round."""
+    guard-crossing / non-finite round.
+
+    Per-block Newton (``loss.newton``, DESIGN §12): the round start also
+    snapshots the curvature weights w = L''(z) into a (n, 1) scratch; each
+    step re-gathers w through the SAME (tile, block) nnz tiles already in
+    VMEM as h_B = Σ vals² · w[rows] — no extra A traffic, no extra scratch
+    beyond the weight vector (the per-step h is a local, gather and delta
+    happen in the same grid step here)."""
+    newton = loss.newton
 
     def kernel(idx_ref, scal_ref, rows_ref, vals_ref, z0_ref, x0_ref, y_ref,
                *refs):
+        if newton:
+            refs, (w_s,) = refs[:-1], refs[-1:]
         if emit_dz:
             (dzo_ref, xo_ref, h_ref, z_s, dz_s, r_s, x_s, d_s) = refs
         else:
@@ -231,11 +241,20 @@ def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
 
         @pl.when(k_id == 0)
         def _round_start():
-            r_s[...] = _residual(z_s[...], y_ref[...], one, loss)
+            r_s[...] = loss.residual(z_s[...], y_ref[...], one)
+            if newton:
+                w_s[...] = loss.curvature_weights(z_s[...], y_ref[...], one)
 
         rows = rows_ref[0]                        # (tile, block)
         vals = vals_ref[0].astype(jnp.float32)
         g = _tile_gather(rows, vals, r_s[...].reshape(-1))    # (1, block)
+        if newton:
+            # Per-block Newton curvature from the tiles already fetched:
+            # h_B = Σ vals² · w[rows] (padded slots are val-0 no-ops).
+            h = jnp.maximum(
+                _tile_gather(rows, vals * vals, w_s[...].reshape(-1)), 1e-8)
+        else:
+            h = beta
         b = idx_ref[r_id, k_id]
         # All K deltas are taken from the *pre-round* x (the x scratch is
         # only updated at round end), so duplicate block draws within a
@@ -244,7 +263,7 @@ def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
         # Backoff mask: blocks at or past k_eff contribute nothing this
         # round (multiply by exactly 1.0 when k_eff == K).
         live = jnp.where(k_id < k_eff, 1.0, 0.0).astype(jnp.float32)
-        dlt = block_delta(x_s[pl.ds(b, 1), :], g, lam, beta) * live
+        dlt = block_delta(x_s[pl.ds(b, 1), :], g, lam, h) * live
         d_s[pl.ds(k_id, 1), :] = dlt
         n = z_s.shape[0]
         z_s[...] = _tile_scatter(z_s[...].reshape(-1), rows, vals,
@@ -270,8 +289,8 @@ def _make_fused_sparse_kernel(loss: str, K: int, emit_dz: bool = False):
                 h_ref[0, 0] = jnp.maximum(
                     h_ref[0, 0], jnp.where(ok, 0.0, 1.0))
             else:
-                f = _round_objective(z_s[...], y_ref[...], one,
-                                     x_s[...], lam, loss)
+                f = loss.objective(z_s[...], y_ref[...], one,
+                                   x_s[...], lam)
                 f_ref[0, 0] = f
                 bad = ~jnp.isfinite(f) | (f > guard)
                 h_ref[0, 0] = jnp.maximum(
@@ -289,6 +308,7 @@ def _fused_sparse_call(rows, vals, z, x, blk_idx, lam, beta, y, loss,
 
     ``k_eff`` (dynamic, defaults to K) and ``guard_f`` (defaults to +inf)
     ride in the scalar-prefetch vector — see the dense ``_fused_call``."""
+    loss = resolve_loss(loss)
     nblk, tile, block = rows.shape
     n = z.shape[0]
     R, K = blk_idx.shape
@@ -353,7 +373,9 @@ def _fused_sparse_call(rows, vals, z, x, blk_idx, lam, beta, y, loss,
             pltpu.VMEM((n, 1), jnp.float32),           # r  (round-start res.)
             pltpu.VMEM((nblk, block), jnp.float32),    # x
             pltpu.VMEM((K, block), jnp.float32),       # delta
-        ],
+        ] + ([
+            pltpu.VMEM((n, 1), jnp.float32),           # w  curvature weights
+        ] if loss.newton else []),
     )
     return pl.pallas_call(
         _make_fused_sparse_kernel(loss, K, emit_dz=emit_dz),
@@ -365,7 +387,8 @@ def _fused_sparse_call(rows, vals, z, x, blk_idx, lam, beta, y, loss,
 
 @functools.partial(jax.jit, static_argnames=("loss", "interpret"))
 def fused_sparse_shotgun_rounds(rows, vals, z, x, blk_idx, lam, beta, y,
-                                loss: str = LASSO, interpret: bool = False,
+                                loss: str | Loss = LASSO,
+                                interpret: bool = False,
                                 k_eff=None, guard_f=None):
     """R Block-Shotgun rounds over BlockedCSC tiles in ONE pallas_call.
 
@@ -395,7 +418,7 @@ def fused_sparse_shotgun_rounds(rows, vals, z, x, blk_idx, lam, beta, y,
 
 @functools.partial(jax.jit, static_argnames=("loss", "interpret"))
 def fused_sparse_shotgun_delta_rounds(rows, vals, z, x, blk_idx, lam, beta,
-                                      y, loss: str = LASSO,
+                                      y, loss: str | Loss = LASSO,
                                       interpret: bool = False, k_eff=None):
     """Shard-local fused sparse engine kernel: R rounds against a margin
     *snapshot* (DESIGN §3).  Same dataflow as ``fused_sparse_shotgun_rounds``
@@ -417,7 +440,8 @@ def fused_sparse_shotgun_delta_rounds(rows, vals, z, x, blk_idx, lam, beta,
 
 def fused_sparse_vmem_bytes(n: int, nblk: int, tile: int, K: int,
                             block: int = BLOCK, emit_dz: bool = False,
-                            val_bytes: int = 4, slots: int = 1) -> int:
+                            val_bytes: int = 4, slots: int = 1,
+                            loss: str | Loss = "lasso") -> int:
     """f32/int32 VMEM resident set of the fused sparse kernel (DESIGN §8.3):
     z/r scratch (+ Δz for the engine variant), the z0/y in- and z out-
     vectors, the three full-width x buffers (x0/scratch/out), the K-row
@@ -431,10 +455,15 @@ def fused_sparse_vmem_bytes(n: int, nblk: int, tile: int, K: int,
     accepts, not the rounds-per-launch.  ``slots`` is the batched-launch
     multiplier (DESIGN §11): the vmapped entry points stack S slots on a
     leading axis, modeled as slots × the per-problem resident set (see
-    ``shotgun_block.fused_vmem_bytes``)."""
+    ``shotgun_block.fused_vmem_bytes``).  ``loss`` prices the logistic
+    kernel twins: a Newton spec adds the (n, 1) curvature-weight scratch
+    (the per-block h is a per-step local here — no (K, block) accumulator,
+    DESIGN §12)."""
+    newton = resolve_loss(loss).newton
     # z0-in, y-in, z_s, r_s, plus z-out (margin-owning) or dz_s + dz-out
-    # minus z-out (engine variant): 5 vs 6 n-vectors
-    vecs = (6 if emit_dz else 5) * n * 4
+    # minus z-out (engine variant): 5 vs 6 n-vectors; Newton adds the
+    # curvature-weight vector
+    vecs = ((6 if emit_dz else 5) + (1 if newton else 0)) * n * 4
     xbuf = 3 * nblk * block * 4                    # x0, x_s, x out
     dbuf = K * block * 4                           # delta scratch
     # rows (int32) + vals (val_bytes), each double-buffered

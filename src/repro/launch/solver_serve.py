@@ -176,12 +176,20 @@ class SolverService:
         if req.x0 is not None:
             req.warm = req.warm or "given"
             return np.asarray(req.x0, np.float32)
-        x0, kind = self.cache.get(req.problem_id, float(req.prob.lam))
+        x0, kind = self.cache.get(req.problem_id, float(req.prob.lam),
+                                  loss=req.prob.loss)
         req.warm = kind
         return None if x0 is None else x0
 
     def _admit(self, req: SolveRequest, slot: int) -> None:
         m = self.meta
+        if req.prob.loss != m.loss:
+            # one jaxpr per stream: a mixed-loss stream would either
+            # retrace or silently run the wrong residual tile
+            raise ValueError(
+                f"mixed-loss stream: request {req.problem_id!r} carries "
+                f"loss {req.prob.loss!r} but this stream is admitted for "
+                f"loss {m.loss!r}")
         sa = normalize_problem(req.prob, m)
         x0 = self._warm_start(req)
         if x0 is None:
@@ -269,7 +277,8 @@ class SolverService:
         req.done = True
         req.k_eff = 0
         if status == "ok":
-            self.cache.put(req.problem_id, float(req.prob.lam), req.x)
+            self.cache.put(req.problem_id, float(req.prob.lam), req.x,
+                           loss=req.prob.loss)
 
     def _save_partials(self) -> None:
         """Before deadline eviction: stash each stale slot's iterate so the

@@ -79,9 +79,9 @@ def test_unscale_x_maps_back_to_raw_features():
 @pytest.mark.parametrize("loss", [obj.LASSO, obj.LOGISTIC])
 def test_masked_data_loss_matches_kernel_copy(loss):
     """The Pallas kernels keep an import-independent copy of the masked
-    objective (shotgun_block._round_objective, 'keep the two in sync') —
+    objective (shotgun_block.Loss.objective, 'keep the two in sync') —
     pin the two against each other so drift fails loudly."""
-    from repro.kernels.shotgun_block import _round_objective
+    from repro.kernels.shotgun_block import resolve_loss
     rng = np.random.default_rng(7)
     n, d = 64, 24
     z = jnp.asarray(rng.standard_normal(n), jnp.float32)
@@ -91,7 +91,7 @@ def test_masked_data_loss_matches_kernel_copy(loss):
     x = jnp.asarray(rng.standard_normal(d), jnp.float32)
     lam = jnp.float32(0.37)
     want = obj.masked_data_loss(z, y, mask, loss) + lam * jnp.sum(jnp.abs(x))
-    got = _round_objective(z, y, mask, x, lam, loss)
+    got = resolve_loss(loss).objective(z, y, mask, x, lam)
     np.testing.assert_allclose(float(got), float(want), rtol=1e-6, atol=1e-6)
 
 
